@@ -1,0 +1,141 @@
+"""Paper Fig. 5 — 100,000-class classification: Whale DP vs DP + op split.
+
+The paper's setting (§3.2): ResNet-50 features (~90M params) + a 100k-way
+FC+softmax head (~782M params).  Under pure DP every GPU all-reduces the
+782M-param head's gradients over 35 Gb/s Ethernet *and* burns GPU memory on
+the replicated head + the (B, 100k) logits, capping the per-GPU batch.  The
+hybrid (Case 2) replicates the features, splits the head over the GPUs —
+head gradients never cross devices, the loss stays sharded (Fig 4), and the
+freed memory allows a much larger mini-batch ("We could tune the total
+mini-batch size to get more performance gains" — §3.2).  Measured headline:
+14.8× at 64 GPUs.
+
+This harness reproduces the effect with the meta-driven cost model, using
+memory feasibility to pick each strategy's max per-GPU batch (powers of two,
+as one would in practice), then compares samples/sec.  A small measured
+CPU-device run of the actual Case-2 program (examples/classification_split)
+covers the executable path.
+
+Output CSV: ``fig5,<system>,<gpus>,<batch_per_gpu>,<samples_per_s>,<speedup>``.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import (StrategySpec, V100_PAPER, WorkloadMeta,
+                                   step_cost, throughput)
+
+RESNET_FLOPS = 4.1e9            # fwd FLOPs per 224×224 image
+FEAT_PARAMS = 90e6
+HEAD_PARAMS = 782e6             # 2048 → ~382k??  paper: 782M ≈ 2048 × 100k ×4
+N_CLASSES = 100_000
+FEAT_DIM = 2048                 # resnet50 pool dim (782M/100k ≈ 7.8k? paper's
+                                # head counts fc+softmax aux — we take theirs)
+
+
+ACT_BYTES_PER_IMG_LAYER = 3e6   # ≈150 MB fp32 activations/image over ~50
+                                # layers — the standard ResNet-50 footprint
+
+
+def classification_meta(batch: int) -> WorkloadMeta:
+    head_flops = 2 * batch * FEAT_DIM * N_CLASSES
+    return WorkloadMeta(
+        name="resnet50-100k",
+        fwd_flops=RESNET_FLOPS * batch + head_flops,
+        param_bytes=(FEAT_PARAMS + HEAD_PARAMS) * 4,
+        tp_shardable_param_bytes=HEAD_PARAMS * 4,
+        act_bytes_per_layer=batch * ACT_BYTES_PER_IMG_LAYER,
+        n_layers=50,
+        batch=batch,
+        logits_bytes=batch * N_CLASSES * 4,
+        head_param_bytes=HEAD_PARAMS * 4,
+        opt_state_factor=1.0,          # SGD + momentum (classification)
+    )
+
+
+def max_feasible_batch(gpus: int, strat_of, cap: int = 128) -> int:
+    best = 0
+    b = 1
+    while b <= cap:
+        meta = classification_meta(b * gpus)
+        c = step_cost(meta, strat_of(gpus), V100_PAPER, overlap=0.5)
+        if c.feasible:
+            best = b
+        b *= 2
+    return best
+
+
+# ---------------------------------------------------------------------------
+# the hybrid is a PER-SUBGRAPH strategy (Whale's whole point): the feature
+# extractor is replica'd over all GPUs while the head is split over all
+# GPUs.  A uniform (dp, tp) spec cannot express that, so its cost is
+# assembled from the cost model's collective primitives per subgraph.
+# ---------------------------------------------------------------------------
+
+from repro.core.cost_model import all_gather_time, all_reduce_time  # noqa: E402
+
+
+def hybrid_step_cost(per_gpu_batch: int, gpus: int, hw=V100_PAPER,
+                     overlap: float = 0.5):
+    """Case 2: replica(features) over all GPUs + split(head) over all GPUs."""
+    B = per_gpu_batch * gpus
+    eth = hw.bw_for_axis("data")
+    eff = hw.peak_flops * hw.mxu_eff
+    # feature subgraph: DP compute + 90M-param gradient all-reduce
+    t_feat = per_gpu_batch * RESNET_FLOPS * 3 / eff
+    t_feat_ar = all_reduce_time(FEAT_PARAMS * 4, gpus, eth) * (1 - overlap)
+    # head subgraph: features all-gathered to every shard (fwd) + the
+    # transposed grad scatter (bwd ≈ same bytes); head matmul split /gpus;
+    # loss reductions are O(B) scalars (Fig 4) — negligible
+    feats_bytes = B * FEAT_DIM * 4
+    t_head_ag = 2 * all_gather_time(feats_bytes, gpus, eth)
+    t_head = 3 * 2 * B * FEAT_DIM * N_CLASSES / gpus / eff
+    t = t_feat + t_feat_ar + t_head_ag + t_head
+    # memory: replicated features + sharded head + local activations/logits
+    mem = (FEAT_PARAMS * 4 * 3 + HEAD_PARAMS * 4 * 3 / gpus
+           + per_gpu_batch * ACT_BYTES_PER_IMG_LAYER * 50
+           + B * N_CLASSES * 4 / gpus)
+    return t, mem <= hw.hbm_bytes
+
+
+def max_feasible_batch_hybrid(gpus: int, cap: int = 128) -> int:
+    best = 0
+    b = 1
+    while b <= cap:
+        if hybrid_step_cost(b, gpus)[1]:
+            best = b
+        b *= 2
+    return best
+
+
+def model_rows():
+    rows = []
+    dp_strat = lambda g: StrategySpec(dp=g, remat=False, vocab_split=False)
+    for gpus in (8, 16, 32, 64):
+        b_dp = max_feasible_batch(gpus, dp_strat)
+        tp_dp = throughput(classification_meta(b_dp * gpus), dp_strat(gpus),
+                           V100_PAPER, overlap=0.5)
+        b_hy = max_feasible_batch_hybrid(gpus)
+        t_hy, _ = hybrid_step_cost(b_hy, gpus)
+        tp_hy = b_hy * gpus / t_hy
+        rows.append((gpus, b_dp, tp_dp, b_hy, tp_hy))
+    return rows
+
+
+def main(csv=True) -> list:
+    out = []
+    for gpus, b_dp, tp_dp, b_hy, tp_hy in model_rows():
+        out.append(("fig5", "whale-dp", gpus, b_dp, tp_dp, 1.0))
+        out.append(("fig5", "whale-dp+split", gpus, b_hy, tp_hy,
+                    tp_hy / max(tp_dp, 1e-9)))
+    if csv:
+        print("table,system,gpus,batch_per_gpu,samples_per_s,speedup_vs_dp")
+        for r in out:
+            print(",".join(f"{x:.1f}" if isinstance(x, float) else str(x)
+                           for x in r))
+        last = out[-1]
+        print(f"# headline: dp+split @64 GPUs = {last[5]:.1f}× DP "
+              f"(paper: 14.8×)")
+    return out
+
+
+if __name__ == "__main__":
+    main()

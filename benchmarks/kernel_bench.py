@@ -1,0 +1,132 @@
+"""Kernel microbenchmarks: Pallas (interpret-validated) vs jnp reference.
+
+This container has no TPU, so Pallas wall-times are meaningless (interpret
+mode runs the kernel body in Python).  What IS measurable and meaningful:
+
+- numerics: max |kernel − oracle| over production-like shapes (also covered
+  by tests; repeated here so the bench output records it),
+- the jnp reference wall time on CPU (tracks regressions in the ref paths
+  the training stack actually runs here),
+- the kernels' VMEM working set per BlockSpec tile vs the 16 MiB budget —
+  a static check that the chosen block shapes are TPU-valid.
+
+Output CSV: ``kernel,<name>,<shape>,<ref_ms>,<max_err>,<vmem_kib>``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _timeit(fn, *args, n=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e3
+
+
+def bench_flash() -> list:
+    from repro.kernels.flash_attention.flash import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    rows = []
+    key = jax.random.key(0)
+    for (B, S, H, K, D, bq, bk) in [(1, 512, 8, 2, 64, 128, 128),
+                                    (2, 1024, 4, 4, 128, 128, 256)]:
+        q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D),
+                              jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D),
+                              jnp.float32)
+        ref = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+        t_ref = _timeit(ref, q, k, v)
+        out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                              interpret=True)
+        err = float(jnp.abs(out - ref(q, k, v)).max())
+        # VMEM tile: q (bq, G·D) + kv rows (S, D)×2 + acc (bq·G, D), f32
+        G = H // K
+        vmem = (bq * G * D + 2 * S * D + bq * G * D * 2) * 4 / 1024
+        rows.append(("flash_attention", f"B{B}S{S}H{H}K{K}D{D}",
+                     t_ref, err, vmem))
+    return rows
+
+
+def bench_xent() -> list:
+    from repro.kernels.xent.ref import xent_ref
+    from repro.kernels.xent.xent import xent_fwd
+    rows = []
+    key = jax.random.key(1)
+    for (T, E, V, bt, bv) in [(512, 256, 8192, 128, 512),
+                              (256, 512, 32768, 128, 1024)]:
+        h = jax.random.normal(key, (T, E), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (E, V),
+                              jnp.float32) * 0.05
+        lab = jax.random.randint(jax.random.fold_in(key, 2), (T,), 0, V)
+        ref = jax.jit(lambda h, w, l: xent_ref(h, w, l)[0])
+        t_ref = _timeit(ref, h, w, lab)
+        nll, _ = xent_fwd(h, w, lab, block_t=bt, block_v=bv, interpret=True)
+        err = float(jnp.abs(nll - ref(h, w, lab)).max())
+        vmem = (bt * E + E * bv + bt * bv) * 4 / 1024
+        rows.append(("xent", f"T{T}E{E}V{V}", t_ref, err, vmem))
+    return rows
+
+
+def bench_ssd() -> list:
+    from repro.kernels.ssd.ref import ssd_ref
+    from repro.kernels.ssd.ssd import ssd_scan_pallas
+    rows = []
+    key = jax.random.key(2)
+    for (B, S, H, P, N, C) in [(1, 512, 4, 64, 64, 128),
+                               (2, 256, 8, 32, 16, 64)]:
+        x = jax.random.normal(key, (B, S, H, P), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(
+            jax.random.fold_in(key, 1), (B, S, H)))
+        A = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (H,))
+                     * 0.3)
+        Bm = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 1, N)) * .3
+        Cm = jax.random.normal(jax.random.fold_in(key, 4), (B, S, 1, N)) * .3
+        ref = jax.jit(lambda *a: ssd_ref(*a)[0])
+        t_ref = _timeit(ref, x, dt, A, Bm, Cm)
+        y, _ = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=C, interpret=True)
+        err = float(jnp.abs(y - ref(x, dt, A, Bm, Cm)).max())
+        vmem = (C * P + 2 * C * N + C * C + P * N) * 4 / 1024
+        rows.append(("ssd", f"B{B}S{S}H{H}P{P}N{N}", t_ref, err, vmem))
+    return rows
+
+
+def bench_quant() -> list:
+    from repro.kernels.quant.quant import dequantize, quantize
+    from repro.kernels.quant.ref import quant_ref
+    rows = []
+    x = jax.random.normal(jax.random.key(3), (1 << 16,), jnp.float32) * 3
+    ref = jax.jit(lambda x: quant_ref(x, block=256)[0])
+    t_ref = _timeit(ref, x)
+    q, s = quantize(x, block=256, interpret=True)
+    err = int(jnp.abs(q.astype(jnp.int32)
+                      - ref(x).astype(jnp.int32)).max())
+    xd = dequantize(q, s, block=256, interpret=True)
+    rt = float(jnp.abs(xd - x).max() / jnp.abs(x).max())
+    rows.append(("quant", "T65536", t_ref, float(err), 256 * 4 / 1024))
+    rows.append(("quant-roundtrip", "T65536", t_ref, rt, 256 * 4 / 1024))
+    return rows
+
+
+def main(csv=True) -> list:
+    rows = bench_flash() + bench_xent() + bench_ssd() + bench_quant()
+    if csv:
+        print("kernel,shape,ref_ms,max_err,vmem_kib")
+        for r in rows:
+            print(f"{r[0]},{r[1]},{r[2]:.2f},{r[3]:.3e},{r[4]:.0f}")
+        assert all(r[3] < 1e-2 for r in rows), "kernel numerics regression"
+        assert all(r[4] < 16 * 1024 for r in rows), "VMEM budget exceeded"
+        print("# all kernels allclose vs oracle; all tiles within 16 MiB VMEM")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

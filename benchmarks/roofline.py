@@ -1,0 +1,79 @@
+"""Roofline table from the dry-run JSONL (EXPERIMENTS.md §Roofline).
+
+Reads ``bench_out/dryrun.jsonl`` (append-only; last record per
+(arch, shape, mesh) wins so hillclimb re-runs supersede baselines), prints
+the three roofline terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs,
+and the roofline fraction per cell.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--jsonl path] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(path: str) -> dict:
+    """Last record per (arch, shape, multi_pod) wins — re-runs supersede."""
+    cells: dict = {}
+    if not os.path.exists(path):
+        return cells
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r.get("tag"):
+                continue          # tagged = perf-iteration run, not baseline
+            cells[(r["arch"], r["shape"], r.get("multi_pod", False))] = r
+    return cells
+
+
+def fmt_row(r: dict, md: bool = False) -> str:
+    sep = " | " if md else "  "
+    if r["status"] == "skipped":
+        return sep.join([f"{r['arch']:22s}", f"{r['shape']:12s}",
+                         r.get("mesh", ""), "skipped: " + r["reason"][:60]])
+    if r["status"] != "ok":
+        return sep.join([f"{r['arch']:22s}", f"{r['shape']:12s}",
+                         r.get("mesh", ""), "FAILED"])
+    return sep.join([
+        f"{r['arch']:22s}", f"{r['shape']:12s}", f"{r['mesh']:8s}",
+        f"{r['t_compute']*1e3:9.1f}", f"{r['t_memory']*1e3:9.1f}",
+        f"{r['t_collective']*1e3:9.1f}", f"{r['bottleneck']:10s}",
+        f"{r['model_flops_hlo_ratio']:5.2f}", f"{r['roofline_frac']:6.3f}",
+        f"{r['mem_temp_gib'] + r['mem_args_gib']:7.2f}",
+    ])
+
+
+HEADER = ("arch                    shape         mesh      comp_ms   "
+          " mem_ms   coll_ms  bottleneck  MF/HLO  rf      GiB/dev")
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="bench_out/dryrun.jsonl")
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--mesh", default=None, help="filter: 16x16 | 2x16x16")
+    args = ap.parse_args(argv)
+
+    cells = load(args.jsonl)
+    rows = sorted(cells.values(),
+                  key=lambda r: (r.get("mesh", ""), r["arch"], r["shape"]))
+    if args.mesh:
+        rows = [r for r in rows if r.get("mesh") == args.mesh]
+    print(HEADER)
+    for r in rows:
+        print(fmt_row(r, md=args.md))
+    ok = [r for r in rows if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_frac"])
+        coll = max(ok, key=lambda r: r["t_collective"] /
+                   max(r["t_compute"] + r["t_memory"], 1e-12))
+        print(f"\n# {len(ok)} ok cells; worst roofline fraction: "
+              f"{worst['arch']}/{worst['shape']} ({worst['roofline_frac']:.3f}); "
+              f"most collective-bound: {coll['arch']}/{coll['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Benchmark suite entry: one harness per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--skip-measured]
+
+Sections:
+  fig2      Bert-Large HDP vs Whale DP vs Whale pipeline (paper Fig. 2)
+  fig5      100k-class DP vs DP+split hybrid             (paper Fig. 5)
+  kernels   Pallas kernel numerics vs oracle + VMEM budget
+  roofline  per-(arch × shape × mesh) table from the dry-run JSONL
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-measured", action="store_true",
+                    help="cost-model/static sections only (fast)")
+    args = ap.parse_args()
+
+    t0 = time.time()
+    print("=" * 72)
+    print("== fig2: Bert-Large pipeline (paper Fig. 2) ==")
+    import benchmarks.fig2_bert_pipeline as fig2
+    if args.skip_measured:
+        rows = fig2.model_rows()
+        print("table,system,gpus,ms_per_step,speedup_vs_hdp")
+        for gpus, hdp, wdp, wpipe in rows:
+            print(f"fig2,horovod-dp,{gpus},{hdp*1e3:.1f},1.0")
+            print(f"fig2,whale-pipeline,{gpus},{wpipe*1e3:.1f},"
+                  f"{hdp/wpipe:.2f}")
+        print(f"# headline: {rows[-1][1]/rows[-1][3]:.2f}× @64 "
+              f"(paper: 2.32×)")
+    else:
+        fig2.main()
+
+    print("=" * 72)
+    print("== fig5: 100k-class hybrid (paper Fig. 5) ==")
+    import benchmarks.fig5_classification as fig5
+    fig5.main()
+
+    print("=" * 72)
+    print("== kernels: Pallas vs oracle ==")
+    import benchmarks.kernel_bench as kb
+    kb.main()
+
+    print("=" * 72)
+    print("== roofline (from dry-run artifacts) ==")
+    import benchmarks.roofline as rl
+    rl.main([])
+
+    print("=" * 72)
+    print(f"benchmarks done in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Case 5 — automatic parallel strategy via the meta-driven cost model.
+
+One call ranks the pruned strategy space for each assigned architecture on a
+256-chip pod and prints the frontier — no lowering, no execution (the
+"meta-driven, not dry-run" methodology of §2).
+
+    PYTHONPATH=src python examples/auto_parallel.py [--devices 256]
+"""
+import argparse
+
+import repro as wh
+from repro.configs import ARCH_NAMES, get_config
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--devices", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--seq", type=int, default=4096)
+    args = ap.parse_args()
+
+    print(f"auto_parallel over {args.devices} TPU v5e chips, "
+          f"batch {args.batch} × seq {args.seq}\n")
+    for arch in ARCH_NAMES:
+        cfg = get_config(arch)
+        if cfg.family == "encdec":
+            seq = min(args.seq, 1024)          # enc-dec: source length
+        else:
+            seq = args.seq
+        meta = wh.lm_workload_meta(cfg, batch=args.batch, seq=seq)
+        cands = wh.search(meta, args.devices, wh.TPU_V5E, top_k=3)
+        if not cands:
+            print(f"{arch:24s} NO feasible strategy")
+            continue
+        best = cands[0]
+        print(f"{arch:24s} {best.strategy.describe():44s} "
+              f"{best.total*1e3:9.1f} ms/step  "
+              f"mem {best.cost.mem_bytes/2**30:5.1f} GiB")
+        for c in cands[1:]:
+            print(f"{'':24s} {c.strategy.describe():44s} "
+                  f"{c.total*1e3:9.1f} ms/step  "
+                  f"mem {c.cost.mem_bytes/2**30:5.1f} GiB")
+        print()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Hypothesis grounding: which collectives dominate a train cell's bytes."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import collections
+import re
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, shapes as sh
+from repro.core.planner import compile_plan
+from repro.core.cost_model import StrategySpec
+from repro.launch.mesh import make_production_mesh
+from repro.launch import hlo_analysis as ha
+from repro.models.lm import build
+from repro.optim.optimizer import adamw, adafactor
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
+micro = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+optn = sys.argv[3] if len(sys.argv) > 3 else "adamw"
+
+mesh = make_production_mesh()
+model = build(get_config(arch))
+strat = StrategySpec(dp=16, tp=16, micro_batches=micro, zero=3)
+plan = compile_plan(model, mesh, strategy=strat)
+cell = sh.SHAPES["train_4k"]
+bspecs = sh.batch_specs(model, cell)
+opt = adafactor(lr=1e-4) if optn == "adafactor" else adamw(moment_dtype="bfloat16")
+fn = plan.jit_train_step(opt, bspecs, micro_batches=micro)
+osh = jax.eval_shape(opt.init, plan.param_shapes)
+with mesh:
+    compiled = fn.lower(plan.param_shapes, osh, bspecs,
+                        jax.ShapeDtypeStruct((), jnp.int32)).compile()
+hlo = compiled.as_text()
+comps = ha.parse_computations(hlo)
+
+items = collections.Counter()
+def visit(name, mult, stack):
+    if name not in comps or name in stack:
+        return
+    stack = stack | {name}
+    for line in comps[name]:
+        m = ha._COLL_RE.search(line)
+        if m:
+            b = ha._shape_bytes(m.group(1))
+            kind = m.group(2)
+            shape = m.group(1)[:48]
+            md = re.search(r'op_name="([^"]*)"', line)
+            tag = (md.group(1).split("/")[-1][:40] if md else "?")
+            items[(kind, shape, tag)] += mult * b
+        mw = ha._WHILE_RE.search(line)
+        if mw:
+            visit(mw.group(2), mult * ha.trip_count(comps.get(mw.group(1), [])),
+                  stack)
+entry = [l for l in hlo.splitlines() if l.startswith("ENTRY")][0]
+visit(ha._HEADER_RE.match(entry).group(1), 1, frozenset())
+total = sum(items.values())
+print(f"{arch}: total (unweighted result bytes×trips) {total/2**30:.1f} GiB")
+for (kind, shape, tag), b in items.most_common(14):
+    print(f"  {b/2**30:8.2f} GiB  {kind:18s} {shape:50s} {tag}")

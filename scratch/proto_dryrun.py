@@ -1,0 +1,130 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs import shapes as sh
+from repro.core.sharding import hybrid_rules, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.models.lm import build
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "tinyllama-1.1b"
+shape = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+multi = len(sys.argv) > 3 and sys.argv[3] == "multi"
+
+t0 = time.time()
+mesh = make_production_mesh(multi_pod=multi)
+cfg = get_config(arch)
+model = build(cfg)
+rules = hybrid_rules(mesh)
+pshapes = model.param_shapes()
+paxes = model.axes()
+pspecs = rules.param_specs_tree(paxes, pshapes)
+print("setup", time.time() - t0)
+
+def report(compiled):
+    ma = compiled.memory_analysis()
+    print("argument bytes/dev:", ma.argument_size_in_bytes / 2**30, "GiB")
+    print("temp bytes/dev:", ma.temp_size_in_bytes / 2**30, "GiB")
+    print("output bytes/dev:", ma.output_size_in_bytes / 2**30, "GiB")
+    print("flops:", compiled.cost_analysis().get("flops", None))
+    import re
+    txt = compiled.as_text()
+    colls = {}
+    for mm in re.finditer(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt):
+        colls[mm.group(1)] = colls.get(mm.group(1), 0) + 1
+    print("collective op counts:", colls)
+    print("HLO len:", len(txt))
+
+
+cell = sh.SHAPES[shape]
+ns = lambda tree: jax.tree.map(lambda s: jax.NamedSharding(mesh, s), tree)
+if cell.step == "prefill":
+    specs = sh.batch_specs(model, cell)
+    bspecs = {k: rules.spec_for(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+              for k, v in specs.items()}
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return model.prefill(params, batch, gen_budget=0)
+
+    t0 = time.time()
+    with use_rules(rules):
+        lowered = jax.jit(prefill_step, in_shardings=(ns(pspecs), ns(bspecs))).lower(pshapes, specs)
+    print("lower", time.time() - t0)
+    t0 = time.time()
+    compiled = lowered.compile()
+    print("compile", time.time() - t0)
+    report(compiled)
+elif cell.step == "decode":
+    specs = sh.decode_specs(model, cell)
+    st_axes = model.state_axes()
+    sspecs = {
+        "tokens": rules.spec_for(("batch",), specs["tokens"].shape),
+        "state": jax.tree.map(
+            lambda names, sds: rules.spec_for(names, sds.shape),
+            st_axes, specs["state"],
+            is_leaf=lambda t: isinstance(t, tuple) and all(isinstance(e, (str, type(None))) for e in t)),
+    }
+
+    def serve_step(params, tokens, state):
+        with use_rules(rules):
+            return model.serve_step(params, tokens, state)
+
+    t0 = time.time()
+    with use_rules(rules):
+        lowered = jax.jit(serve_step, in_shardings=(ns(pspecs), ns(sspecs["tokens"]), ns(sspecs["state"]))).lower(
+            pshapes, specs["tokens"], specs["state"])
+    print("lower", time.time() - t0)
+    t0 = time.time()
+    compiled = lowered.compile()
+    print("compile", time.time() - t0)
+    report(compiled)
+elif cell.step == "train":
+    specs = sh.batch_specs(model, cell)
+    bspecs = {k: rules.spec_for(("batch",) + (None,) * (len(v.shape) - 1), v.shape)
+              for k, v in specs.items()}
+
+    MICRO = int(os.environ.get("MICRO", "8"))
+
+    def train_step(params, batch):
+        with use_rules(rules):
+            def micro_step(grads, mb):
+                (loss, metrics), g = jax.value_and_grad(model.loss_fn, has_aux=True)(params, mb)
+                return jax.tree.map(jnp.add, grads, g), loss
+
+            gz = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mbatch = jax.tree.map(
+                lambda x: jnp.moveaxis(x.reshape((MICRO, x.shape[0] // MICRO) + x.shape[1:]), 0, 0),
+                batch)
+            grads, losses = jax.lax.scan(micro_step, gz, mbatch)
+            new_params = jax.tree.map(lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+        return new_params, losses.mean()
+
+    fn = jax.jit(train_step, in_shardings=(jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspecs),
+                                           jax.tree.map(lambda s: jax.NamedSharding(mesh, s), bspecs)))
+    t0 = time.time()
+    with use_rules(rules):
+        lowered = fn.lower(pshapes, specs)
+    print("lower", time.time() - t0)
+    t0 = time.time()
+    compiled = lowered.compile()
+    print("compile", time.time() - t0)
+    ma = compiled.memory_analysis()
+    print("argument bytes/dev:", ma.argument_size_in_bytes / 2**30, "GiB")
+    print("temp bytes/dev:", ma.temp_size_in_bytes / 2**30, "GiB")
+    print("output bytes/dev:", ma.output_size_in_bytes / 2**30, "GiB")
+    ca = compiled.cost_analysis()
+    print("flops:", ca.get("flops", None))
+    txt = compiled.as_text()
+    import re
+    colls = {}
+    for m in re.finditer(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt):
+        colls[m.group(1)] = colls.get(m.group(1), 0) + 1
+    print("collective op counts:", colls)
+    print("HLO len:", len(txt))

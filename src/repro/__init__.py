@@ -1,0 +1,6 @@
+"""repro — Whale (unified multi-strategy distributed training) in JAX.
+
+``import repro as wh`` gives the paper's API surface (cluster / replica /
+split / stage / pipeline / auto-parallel scopes, the engine, cost model).
+"""
+from repro.core import *  # noqa: F401,F403

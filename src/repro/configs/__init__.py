@@ -1,0 +1,28 @@
+"""Registry of the ten assigned architectures (+ helpers)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import LMCfg, shrink  # noqa: F401
+
+_ARCH_MODULES = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "grok-1-314b": "grok_1_314b",
+    "stablelm-3b": "stablelm_3b",
+    "gemma-2b": "gemma_2b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "qwen3-1.7b": "qwen3_1_7b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "mamba2-1.3b": "mamba2_1_3b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+}
+
+ARCH_NAMES = tuple(_ARCH_MODULES)
+
+
+def get_config(name: str, smoke: bool = False) -> LMCfg:
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[name]}")
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,53 @@
+"""Config base: re-exports LMCfg and provides the generic smoke-reduction.
+
+Each assigned architecture lives in its own module (``repro/configs/<id>.py``)
+exposing ``CONFIG`` (the exact published configuration) and ``SMOKE`` (a
+reduced same-family variant for CPU tests).  ``repro.configs`` assembles the
+registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.lm import LMCfg  # noqa: F401  (re-export)
+
+
+def shrink(cfg: LMCfg, **overrides) -> LMCfg:
+    """Reduced same-family config: small widths, few layers/experts, tiny
+    vocab — structure (GQA ratios, MoE top-k, hybrid pattern) preserved."""
+    heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    kv = max(1, heads * cfg.n_kv_heads // max(cfg.n_heads, 1)) if heads else 0
+    pattern = cfg.attn_period if cfg.family == "hybrid" else \
+        (cfg.moe_every if cfg.family == "moe" else 1)
+    n_layers = max(2, pattern)
+    if cfg.family == "hybrid":
+        n_layers = cfg.attn_period
+    small = dict(
+        n_layers=n_layers,
+        d_model=128,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=32 if heads else 0,
+        d_ff=256 if cfg.d_ff else 0,
+        vocab=512,
+        n_experts=min(cfg.n_experts, 8),
+        top_k=min(cfg.top_k, 2),
+        n_shared=min(cfg.n_shared, 1),
+        d_ff_expert=64 if cfg.d_ff_expert else 0,
+        n_enc_layers=2 if cfg.n_enc_layers else 0,
+        n_dec_layers=2 if cfg.n_dec_layers else 0,
+        frontend_len=16 if cfg.frontend_len else 0,
+        ssd_headdim=32,
+        ssd_state=16,
+        ssd_chunk=32,
+        loss_chunk=64,
+        attn_block_q=64,
+        attn_block_k=64,
+        remat="none",
+        dtype="float32",
+        param_dtype="float32",
+        vocab_pad_multiple=16,
+        name=cfg.name + "-smoke",
+    )
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

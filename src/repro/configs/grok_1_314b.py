@@ -1,0 +1,29 @@
+"""grok-1-314b — 8-expert top-2 MoE, GQA kv=8.  [hf:xai-org/grok-1; unverified]
+
+Memory note: 314B params mandate ZeRO-3/FSDP over the data axis on top of
+the model-axis expert tensor parallelism (8 experts don't divide the 16-way
+model axis, so each expert's d_ff=32768 is sliced instead — see
+models/moe.py).  Optimizer moments are kept in bf16 for this arch.
+"""
+from repro.configs.base import LMCfg, shrink
+
+CONFIG = LMCfg(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=32768,
+    d_ff_expert=32768,
+    n_experts=8,
+    top_k=2,
+    n_shared=0,
+    vocab=131072,
+    norm="rms",
+    act="gelu",
+    remat="full",
+)
+
+SMOKE = shrink(CONFIG)

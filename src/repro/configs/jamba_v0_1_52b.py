@@ -1,0 +1,31 @@
+"""jamba-v0.1-52b — hybrid: attn:mamba 1:7 interleave, MoE 16e top-2 on every
+other layer.  [arXiv:2403.19887; hf]
+
+Period-8 super-block (scan unit): position 4 is attention, the rest SSD;
+odd positions carry the 16-expert MoE MLP (EP: exactly 1 expert per model
+shard), even positions a dense MLP.  We use mamba2-SSD mixers in place of
+Jamba's mamba-1 (DESIGN.md §9) — same O(1)-state decode, so `long_500k` runs.
+"""
+from repro.configs.base import LMCfg, shrink
+
+CONFIG = LMCfg(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    d_ff_expert=14336,
+    n_experts=16,
+    top_k=2,
+    vocab=65536,
+    attn_period=8,
+    attn_offset=4,
+    norm="rms",
+    act="silu",
+    remat="full",
+)
+
+SMOKE = shrink(CONFIG, attn_period=4, attn_offset=2, n_layers=4)

@@ -1,0 +1,25 @@
+"""mamba2-1.3b — attention-free SSD (state-space duality), ssm_state=128.
+[arXiv:2405.21060; unverified]
+
+d_inner = 2·d_model = 4096, headdim 64 → 64 SSD heads (TP target).
+O(1)-state decode ⇒ the only non-skipped `long_500k` cells are this arch
+and jamba.
+"""
+from repro.configs.base import LMCfg, shrink
+
+CONFIG = LMCfg(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    vocab=50280,
+    ssd_headdim=64,
+    ssd_state=128,
+    d_conv=4,
+    ssd_chunk=256,
+    norm="rms",
+    tie_embeddings=True,
+    remat="full",
+)
+
+SMOKE = shrink(CONFIG)

@@ -1,0 +1,30 @@
+"""qwen2-vl-2b — VLM backbone: M-RoPE, GQA kv=2, stub vision frontend.
+[arXiv:2409.12191; hf]
+
+The vision tower is a STUB per the assignment — ``input_specs`` supplies
+precomputed (B, 64, d_model) patch embeddings merged at the sequence head;
+M-RoPE uses (t, h, w) grid positions over the patch prefix.
+12 query heads don't divide the 16-way model axis → sequence-sharded attention.
+"""
+from repro.configs.base import LMCfg, shrink
+
+CONFIG = LMCfg(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    norm="rms",
+    act="silu",
+    mrope_sections=(16, 24, 24),   # t/h/w bands over head_dim//2 = 64
+    tie_embeddings=True,
+    frontend="vision",
+    frontend_len=64,
+    remat="full",
+)
+
+SMOKE = shrink(CONFIG, mrope_sections=(4, 6, 6))

@@ -1,0 +1,24 @@
+"""Whale core: strategy primitives, IR, engine, cost model, auto-parallel.
+
+The user-facing surface mirrors the paper's API (``import repro as wh``):
+
+    with wh.cluster(mesh_shape=(2, 4), axis_names=("data", "model")):
+        with wh.replica():
+            h = wh.sub("backbone", net)(params, x)
+        with wh.split(dim=-1):
+            logits = wh.sub("fc", head)(head_params, h)
+"""
+from repro.core.auto import auto_parallel, meta_from_taskgraph, search  # noqa: F401
+from repro.core.cost_model import (Hardware, StrategySpec, TPU_V5E,  # noqa: F401
+                                   V100_PAPER, WorkloadMeta, lm_workload_meta,
+                                   step_cost, throughput)
+from repro.core.ir import Subgraph, TaskGraph, TensorMeta, capture_meta  # noqa: F401
+from repro.core.planner import (ExecutionPlan, compile_plan,  # noqa: F401
+                                compile_plan_from_cluster, mesh_for_strategy,
+                                rules_for_strategy, strategy_from_taskgraph)
+from repro.core.sharding import (ShardingRules, constrain, hybrid_rules,  # noqa: F401
+                                 use_rules)
+from repro.core.strategies import (cluster, pipeline, replica, split,  # noqa: F401
+                                   stage, sub)
+from repro.core.strategies import auto_parallel as auto_scope  # noqa: F401
+from repro.core.vdevice import Cluster, VirtualDevice  # noqa: F401

@@ -1,0 +1,126 @@
+"""Automatic parallel-strategy search (paper Case 5 / contributions #3–4).
+
+Given a workload's metadata (from the Whale IR or directly from an LMCfg —
+both are meta-driven, nothing executes) and a device budget, enumerate the
+pruned strategy space and rank by the cost model:
+
+- **Clustering** (paper: "groups repeatedly occurred sub-structures to prune
+  the search space"): the TaskGraph's repeated layers are collapsed by
+  :meth:`TaskGraph.cluster_repeats`; cost is evaluated once per distinct
+  group × repeat count.  For LMCfg workloads the clustering is already
+  structural (one pattern × n_rep), so the search never scales with depth.
+- **Pruning**: (dp, tp, pp) only ranges over divisor factorizations of the
+  device count; tp is capped at the size of one pod's minor dimension
+  (operator sharding across DCN is never competitive); pp over divisors of
+  the layer count; micro-batches over powers of two up to batch; infeasible
+  (OOM) points are discarded by the cost model's memory term.
+
+Returns the ranked candidates so callers can inspect the frontier (the
+EXPERIMENTS.md §Auto table does exactly this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable
+
+from repro.core.cost_model import (CostBreakdown, Hardware, StrategySpec,
+                                   TPU_V5E, WorkloadMeta, step_cost)
+
+
+def divisors(n: int) -> list:
+    out = [d for d in range(1, n + 1) if n % d == 0]
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    strategy: StrategySpec
+    cost: CostBreakdown
+
+    @property
+    def total(self) -> float:
+        return self.cost.total
+
+
+def enumerate_strategies(meta: WorkloadMeta, devices: int, *,
+                         max_tp: int = 16, max_pp: int | None = None,
+                         micro_options: Iterable | None = None,
+                         ) -> list:
+    """Pruned (dp, tp, pp, micro, zero, vocab_split) enumeration."""
+    max_pp = max_pp or min(meta.n_layers, 16)
+    out = []
+    for tp in divisors(devices):
+        if tp > max_tp:
+            continue
+        rest = devices // tp
+        for pp in divisors(rest):
+            if pp > max_pp or meta.n_layers % pp:
+                continue
+            dp = rest // pp
+            if meta.batch % dp:
+                continue
+            micros = micro_options or [m for m in (1, 2, 4, 8, 16, 32)
+                                       if meta.batch // dp >= m]
+            for m in (micros if pp > 1 else [1]):
+                for zero in ((0, 1, 3) if dp > 1 else (0,)):
+                    for vs in ((True, False) if tp > 1 else (False,)):
+                        for of in (False, True):
+                            out.append(StrategySpec(
+                                dp=dp, tp=tp, pp=pp, micro_batches=m,
+                                zero=zero, vocab_split=vs, opt_factored=of))
+    return out
+
+
+def search(meta: WorkloadMeta, devices: int, hw: Hardware = TPU_V5E, *,
+           top_k: int = 5, overlap: float = 0.5, **enum_kw) -> list:
+    """Rank the pruned strategy space by estimated step time.
+
+    Returns the ``top_k`` feasible :class:`Candidate`s, best first.
+    """
+    cands = []
+    for strat in enumerate_strategies(meta, devices, **enum_kw):
+        c = step_cost(meta, strat, hw, overlap=overlap)
+        if c.feasible:
+            cands.append(Candidate(strategy=strat, cost=c))
+    cands.sort(key=lambda c: c.total)
+    return cands[:top_k]
+
+
+def auto_parallel(meta: WorkloadMeta, devices: int,
+                  hw: Hardware = TPU_V5E, **kw) -> StrategySpec:
+    """The one-liner of Case 5: pick the best strategy, raise if none fits."""
+    best = search(meta, devices, hw, top_k=1, **kw)
+    if not best:
+        raise RuntimeError(
+            f"no feasible strategy for {meta.name} on {devices}×{hw.name}")
+    return best[0].strategy
+
+
+# ---------------------------------------------------------------------------
+# TaskGraph path (the scopes API): cluster repeats, derive a WorkloadMeta
+# ---------------------------------------------------------------------------
+
+def meta_from_taskgraph(tg, batch: int, *, name: str = "taskgraph",
+                        param_dtype_bytes: int = 4) -> WorkloadMeta:
+    """Meta-driven workload summary from recorded Subgraph metadata.
+
+    Clustering: repeated groups contribute (cost of one representative) ×
+    (group size) — the paper's search-space pruning.
+    """
+    groups = tg.cluster_repeats()
+    fwd_flops = 0.0
+    param_bytes = 0.0
+    act_bytes = []
+    for g in groups:
+        rep = g["nodes"][0]
+        k = len(g["nodes"])
+        fwd_flops += rep.flops * k
+        param_bytes += rep.param_bytes * k
+        act_bytes.append(rep.activation_bytes)
+    n_layers = max(len(tg.nodes), 1)
+    return WorkloadMeta(
+        name=name, fwd_flops=fwd_flops, param_bytes=param_bytes,
+        tp_shardable_param_bytes=param_bytes * 0.95,
+        act_bytes_per_layer=max(act_bytes) if act_bytes else 0.0,
+        n_layers=n_layers, batch=batch)

@@ -1,0 +1,409 @@
+"""Meta-driven cost model (paper contribution #4).
+
+"Different from the dry-run methodology, we use a meta-driven method to
+measure the cost when we run the workload in different devices or
+environments" — the cost of a candidate strategy is computed analytically
+from tensor *metadata* (shapes/dtypes/FLOPs captured by the Whale IR via
+``jax.eval_shape``) plus a table of hardware constants.  Nothing is lowered,
+compiled, or executed during strategy search.
+
+The cost of one training step under a strategy is a four-term sum (the
+paper: "a combination of computation, communication, memory and other
+metadata"):
+
+  T_step = T_compute + T_comm + T_bubble        subject to  M_peak <= HBM
+
+- ``T_compute``: FLOPs / (devices-sharing-the-work × peak FLOP/s), with a
+  configurable MXU efficiency factor.  Training FLOPs = 3 × forward (fwd +
+  2×bwd), + 1 extra forward when full remat is on.
+- ``T_comm``: per-collective byte volumes × the bandwidth of the mesh axis
+  they ride (ICI vs DCN), using standard ring-collective cost formulas
+  (all-reduce moves 2·(n−1)/n · bytes, all-gather/reduce-scatter (n−1)/n).
+- ``T_bubble``: GPipe bubble fraction (S−1)/(M+S−1) applied to the pipeline's
+  compute time.
+- ``M_peak``: params + optimizer state + gradients (each divided by the axes
+  that shard them) + activation working set (micro-batched, remat-aware).
+
+Two hardware tables ship: TPU_V5E (the target) and V100_16G/ETH35 (the
+paper's own cluster — used by benchmarks/fig2 & fig5 to check the cost model
+reproduces the paper's measured speedup ratios).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Mapping
+
+# ---------------------------------------------------------------------------
+# hardware tables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float            # FLOP/s per chip (bf16 / fp16 tensor)
+    hbm_bw: float                # bytes/s per chip
+    hbm_bytes: float             # device memory per chip
+    link_bw: dict                # mesh-axis kind -> bytes/s per chip (uni-dir)
+    mxu_eff: float = 0.55        # achievable fraction of peak on real matmuls
+    axis_kind: Mapping[str, str] = dataclasses.field(
+        default_factory=lambda: {})
+
+    def bw_for_axis(self, axis: str) -> float:
+        kind = self.axis_kind.get(axis, "fast")
+        return self.link_bw[kind]
+
+
+# TPU v5e (assignment constants): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI.
+TPU_V5E = Hardware(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 2**30,
+    link_bw={"fast": 50e9, "slow": 6.25e9},   # ICI link / DCN per chip
+    axis_kind={"data": "fast", "model": "fast", "stage": "fast",
+               "pod": "slow"},
+)
+
+# The paper's cluster: V100-16G with NVLink inside a server, 35 Gb/s Ethernet
+# between servers (§3).  8 GPUs per server.
+V100_PAPER = Hardware(
+    name="v100_eth35",
+    peak_flops=125e12,            # V100 tensor-core fp16 peak
+    hbm_bw=900e9,
+    hbm_bytes=16 * 2**30,
+    link_bw={"fast": 150e9, "slow": 35e9 / 8 / 2},  # NVLink vs 35Gb shared by 8
+    axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
+    mxu_eff=0.45,
+)
+
+
+# ---------------------------------------------------------------------------
+# collective cost formulas (ring algorithms)
+# ---------------------------------------------------------------------------
+
+def all_reduce_time(bytes_: float, n: int, bw: float) -> float:
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * bytes_ / bw
+
+
+def all_gather_time(bytes_: float, n: int, bw: float) -> float:
+    """bytes_ = full (gathered) tensor size."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * bytes_ / bw
+
+
+reduce_scatter_time = all_gather_time
+
+
+def all_to_all_time(bytes_: float, n: int, bw: float) -> float:
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * bytes_ / bw / n
+
+
+def p2p_time(bytes_: float, bw: float) -> float:
+    return bytes_ / bw
+
+
+# ---------------------------------------------------------------------------
+# strategy description (what the auto-searcher enumerates)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    """A point in Whale's strategy space for one TaskGraph.
+
+    dp × tp × pp must equal the device count.  ``zero`` ∈ {0, 1, 2, 3}
+    (stage-3 = FSDP: params sharded over dp).  ``vocab_split`` shards the
+    classifier head over tp (the paper's Fig-4 technique).  ``micro_batches``
+    only matters when pp > 1 (GPipe) or when used for grad accumulation.
+    """
+    dp: int = 1
+    tp: int = 1
+    pp: int = 1
+    micro_batches: int = 1
+    zero: int = 0
+    remat: bool = True
+    vocab_split: bool = True
+    opt_factored: bool = False     # adafactor-style O(N/d) second moments
+
+    @property
+    def devices(self) -> int:
+        return self.dp * self.tp * self.pp
+
+    def describe(self) -> str:
+        bits = []
+        if self.dp > 1:
+            bits.append(f"replica×{self.dp}" + (f"+zero{self.zero}" if self.zero else ""))
+        if self.tp > 1:
+            bits.append(f"split×{self.tp}")
+        if self.pp > 1:
+            bits.append(f"pipeline×{self.pp}(µb={self.micro_batches})")
+        if self.opt_factored:
+            bits.append("adafactor")
+        if not bits:
+            bits.append("single-device")
+        return " ".join(bits)
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadMeta:
+    """Per-step metadata of one model, extracted from the Whale IR / config.
+
+    Everything here is derivable with eval_shape — no execution.  FLOPs are
+    *forward* FLOPs for the global batch; the cost model applies the 3×
+    training multiplier itself.
+    """
+    name: str
+    fwd_flops: float               # forward FLOPs / step (global batch)
+    param_bytes: float             # total parameter bytes
+    # bytes of params that a `split`/tp strategy can shard (e.g. the big FC);
+    # the rest is replicated under pure TP.
+    tp_shardable_param_bytes: float
+    act_bytes_per_layer: float     # activation bytes / layer for global batch
+    n_layers: int
+    batch: int
+    # classifier-head term (the paper's Fig-4/5 case): logits bytes / step
+    logits_bytes: float = 0.0
+    head_param_bytes: float = 0.0
+    # grad/optimizer bytes per param byte (AdamW fp32: grads 1 + m 1 + v 1)
+    opt_state_factor: float = 2.0
+    grad_factor: float = 1.0
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CostBreakdown:
+    compute: float
+    comm: float
+    bubble: float
+    mem_bytes: float
+    feasible: bool
+    detail: dict
+
+    @property
+    def total(self) -> float:
+        if not self.feasible:
+            return math.inf
+        return self.compute + self.comm + self.bubble
+
+
+def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
+              *, overlap: float = 0.0) -> CostBreakdown:
+    """Estimated wall-time of one training step under ``strat`` on ``hw``.
+
+    ``overlap`` ∈ [0, 1): fraction of DP gradient communication hidden under
+    backward compute (XLA latency hiding / Horovod fusion both give ~some).
+    """
+    dp, tp, pp = strat.dp, strat.tp, strat.pp
+    detail: dict = {}
+
+    # ---- compute ----
+    train_flops = meta.fwd_flops * (4.0 if strat.remat else 3.0)
+    shards = dp * tp * pp       # every device computes 1/shards of the work
+    t_compute = train_flops / shards / (hw.peak_flops * hw.mxu_eff)
+    detail["compute"] = t_compute
+
+    # ---- communication ----
+    t_comm = 0.0
+    # (a) DP gradient all-reduce (or reduce-scatter+all-gather under ZeRO)
+    grad_bytes = meta.param_bytes * meta.grad_factor / (tp * pp)
+    if dp > 1:
+        t_dp = all_reduce_time(grad_bytes, dp, hw.bw_for_axis("data"))
+        t_dp *= (1.0 - overlap)
+        t_comm += t_dp
+        detail["dp_allreduce"] = t_dp
+    # (b) ZeRO-3 param all-gather each fwd+bwd (2×) over dp
+    if strat.zero >= 3 and dp > 1:
+        t_ag = 2 * all_gather_time(meta.param_bytes / (tp * pp), dp,
+                                   hw.bw_for_axis("data"))
+        t_comm += t_ag
+        detail["fsdp_allgather"] = t_ag
+    # (c) TP activation all-reduces: 2 per layer fwd, 2 per layer bwd
+    #     (Megatron) each moving the layer activation bytes / (dp·pp)
+    if tp > 1:
+        act = meta.act_bytes_per_layer / dp
+        n_ar = 4 * (meta.n_layers // pp)
+        t_tp = n_ar * all_reduce_time(act, tp, hw.bw_for_axis("model"))
+        t_comm += t_tp
+        detail["tp_allreduce"] = t_tp
+        if strat.vocab_split and meta.logits_bytes:
+            # Fig-4 path: only 3 scalar-ish reductions per loss chunk — model
+            # as 3 all-reduces of (B·S) fp32 rows (max/sumexp/correct).
+            rows = meta.logits_bytes and (meta.batch and meta.logits_bytes)
+            row_bytes = meta.logits_bytes / max(
+                1, (meta.logits_bytes // (4 * meta.batch)) or 1)
+            t_head = 3 * all_reduce_time(row_bytes / dp, tp,
+                                         hw.bw_for_axis("model"))
+            t_comm += t_head
+            detail["vocab_split_head"] = t_head
+        elif meta.logits_bytes:
+            # without the split the full logits must be formed from a
+            # replicated head — an all-gather of the logits over tp
+            t_head = all_gather_time(meta.logits_bytes / dp, tp,
+                                     hw.bw_for_axis("model"))
+            t_comm += t_head
+            detail["head_allgather"] = t_head
+    # (d) pipeline p2p: 2 transfers (fwd + bwd) of the boundary activation
+    #     per micro-batch per stage boundary
+    if pp > 1:
+        act_mb = meta.act_bytes_per_layer / dp / max(strat.micro_batches, 1)
+        t_pp = 2 * (pp - 1) * strat.micro_batches * p2p_time(
+            act_mb, hw.bw_for_axis("stage"))
+        t_comm += t_pp
+        detail["pipeline_p2p"] = t_pp
+    detail["comm"] = t_comm
+
+    # ---- pipeline bubble ----
+    t_bubble = 0.0
+    if pp > 1:
+        m = max(strat.micro_batches, 1)
+        t_bubble = t_compute * (pp - 1) / (m + pp - 1)
+    detail["bubble"] = t_bubble
+
+    # ---- memory ----
+    # params: sharded by tp (shardable part) & pp; zero-3 also by dp
+    p_shard = (meta.tp_shardable_param_bytes / tp
+               + (meta.param_bytes - meta.tp_shardable_param_bytes)) / pp
+    if strat.zero >= 3:
+        p_shard /= dp
+    opt_factor = 0.05 if strat.opt_factored else meta.opt_state_factor
+    opt = meta.param_bytes * opt_factor / (tp * pp)
+    if strat.zero >= 1:
+        opt /= dp
+    grads = meta.param_bytes * meta.grad_factor / (tp * pp)
+    if strat.zero >= 2:
+        grads /= dp
+    # activations: with remat only ~1 layer's working set + per-layer
+    # residuals are live; without, all layers
+    mb = max(strat.micro_batches, 1)
+    act_live = meta.act_bytes_per_layer / dp / mb * (
+        2.0 + (0 if strat.remat else meta.n_layers / pp))
+    if pp > 1:
+        act_live *= min(mb, pp)   # in-flight micro-batches
+    logits_live = 0.0
+    if meta.logits_bytes:
+        logits_live = meta.logits_bytes / dp / (tp if strat.vocab_split else 1)
+        if strat.vocab_split:
+            logits_live = min(logits_live, meta.logits_bytes / dp / tp)
+    mem = p_shard + opt + grads + act_live + logits_live
+    detail["mem"] = mem
+
+    feasible = mem <= hw.hbm_bytes
+    return CostBreakdown(compute=t_compute, comm=t_comm, bubble=t_bubble,
+                         mem_bytes=mem, feasible=feasible, detail=detail)
+
+
+def throughput(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
+               **kw) -> float:
+    """Samples/sec for the workload's global batch under the strategy."""
+    c = step_cost(meta, strat, hw, **kw)
+    if not c.feasible:
+        return 0.0
+    return meta.batch / c.total
+
+
+# ---------------------------------------------------------------------------
+# WorkloadMeta from an LMCfg (meta-driven: pure arithmetic on the config)
+# ---------------------------------------------------------------------------
+
+def lm_workload_meta(cfg, batch: int, seq: int,
+                     act_dtype_bytes: int = 2,
+                     param_dtype_bytes: int = 4) -> WorkloadMeta:
+    """Analytic forward FLOPs / bytes for one LMCfg (dense/moe/ssm/hybrid...).
+
+    Matmul-dominant terms only (the same granularity the roofline uses).
+    """
+    E, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    T = batch * seq
+    hd = cfg.hd
+
+    def attn_flops() -> float:
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        proj = 2 * T * E * (H * hd) + 2 * 2 * T * E * (K * hd) \
+            + 2 * T * (H * hd) * E
+        scores = 2 * T * seq * H * hd * 2 * 0.5          # causal half
+        return proj + scores
+
+    def dense_mlp_flops() -> float:
+        mult = 3 if cfg.gated_mlp else 2
+        return 2 * T * E * cfg.d_ff * mult
+
+    def moe_mlp_flops() -> float:
+        mult = 3
+        routed = 2 * T * E * cfg.d_ff_expert * mult * cfg.top_k
+        shared = 2 * T * E * cfg.d_ff_expert * mult * cfg.n_shared
+        router = 2 * T * E * cfg.n_experts
+        return routed + shared + router
+
+    def ssd_flops() -> float:
+        scfg = cfg.ssd_cfg()
+        H, P, N, C = scfg.n_heads, scfg.headdim, scfg.d_state, scfg.chunk
+        proj = 2 * T * E * (2 * H * P + 2 * N + H) + 2 * T * H * P * E
+        intra = 2 * T * C * H * (N + P)
+        inter = 2 * T * H * P * N * 2
+        return proj + intra + inter
+
+    per_layer = 0.0
+    n_attn = n_ssd = n_moe = n_dense = 0
+    if cfg.family in ("dense", "vlm"):
+        n_attn, n_dense = L, L
+    elif cfg.family == "moe":
+        n_attn = L
+        n_moe = L // cfg.moe_every
+        n_dense = L - n_moe
+    elif cfg.family == "ssm":
+        n_ssd = L
+    elif cfg.family == "hybrid":
+        n_attn = L // cfg.attn_period
+        n_ssd = L - n_attn
+        n_moe = L // 2
+        n_dense = L - n_moe
+    elif cfg.family == "encdec":
+        n_attn = cfg.n_enc_layers + 2 * cfg.n_dec_layers
+        n_dense = cfg.n_enc_layers + cfg.n_dec_layers
+        L = cfg.n_enc_layers + cfg.n_dec_layers
+    flops = (n_attn * attn_flops() + n_ssd * ssd_flops()
+             + n_moe * moe_mlp_flops() + n_dense * dense_mlp_flops())
+    head = 2 * T * E * V
+    flops += head
+
+    # params
+    def attn_params():
+        return E * (cfg.n_heads * hd) * 2 + E * (cfg.n_kv_heads * hd) * 2
+
+    def mlp_params():
+        return E * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+
+    def moe_params():
+        return (cfg.n_experts + cfg.n_shared) * E * cfg.d_ff_expert * 3 \
+            + E * cfg.n_experts
+
+    def ssd_params():
+        scfg = cfg.ssd_cfg()
+        return E * scfg.d_inner * 3 + 2 * E * scfg.d_state + E * scfg.n_heads
+
+    p_count = (n_attn * attn_params() + n_ssd * ssd_params()
+               + n_moe * moe_params() + n_dense * mlp_params())
+    embed = V * E * (1 if cfg.tie_embeddings else 2)
+    param_bytes = (p_count + embed) * param_dtype_bytes
+    tp_shardable = param_bytes * 0.98   # norms/bias stay replicated
+
+    act_per_layer = T * E * act_dtype_bytes * 4   # x + 3 intermediates
+    logits_bytes = T * V * 4                       # fp32 logits if formed
+
+    return WorkloadMeta(
+        name=cfg.name, fwd_flops=float(flops), param_bytes=float(param_bytes),
+        tp_shardable_param_bytes=float(tp_shardable),
+        act_bytes_per_layer=float(act_per_layer), n_layers=max(L, 1),
+        batch=batch, logits_bytes=float(logits_bytes),
+        head_param_bytes=float(E * V * param_dtype_bytes))

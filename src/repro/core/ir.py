@@ -1,0 +1,156 @@
+"""Whale IR: strategy-annotated subgraphs with meta-driven cost capture.
+
+A :class:`Subgraph` records (a) the callable, (b) its strategy annotation
+(from the enclosing scopes), (c) *metadata* captured abstractly — tensor
+shapes/dtypes via ``jax.eval_shape`` and FLOPs/bytes via a jaxpr walk — with
+no execution and no device allocation.  This is the paper's "meta-driven"
+methodology (§2: "Different from the dry-run methodology, we use a
+meta-driven method"): everything the planner and the auto-parallel cost model
+need is available before anything runs.
+
+The :class:`TaskGraph` is the sequential composition of subgraphs (Whale's
+models are layered pipelines; general DAGs reduce to this for the strategies
+in the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorMeta:
+    """Multi-Dimension tensor metadata (abstraction #2)."""
+    shape: tuple
+    dtype: Any
+    logical_axes: tuple | None = None
+
+    @property
+    def bytes(self) -> int:
+        return int(math.prod(self.shape)) * jnp.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class StrategyAnnotation:
+    kind: str                      # replica | split | stage | pipeline | auto
+    options: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Subgraph:
+    """Unit of parallelism (abstraction #1)."""
+    name: str
+    fn: Callable | None
+    strategy: list                 # stack of StrategyAnnotation (outer→inner)
+    inputs: list = dataclasses.field(default_factory=list)    # TensorMeta
+    outputs: list = dataclasses.field(default_factory=list)   # TensorMeta
+    params: list = dataclasses.field(default_factory=list)    # TensorMeta
+    flops: int = 0                 # fwd FLOPs, meta-derived
+    vdevice: Any = None
+
+    @property
+    def param_bytes(self) -> int:
+        return sum(t.bytes for t in self.params)
+
+    @property
+    def activation_bytes(self) -> int:
+        return sum(t.bytes for t in self.outputs)
+
+    def strategy_kinds(self) -> tuple:
+        return tuple(s.kind for s in self.strategy)
+
+
+@dataclasses.dataclass
+class TaskGraph:
+    nodes: list = dataclasses.field(default_factory=list)
+
+    def add(self, sg: Subgraph) -> Subgraph:
+        self.nodes.append(sg)
+        return sg
+
+    def by_name(self, name: str) -> Subgraph:
+        for n in self.nodes:
+            if n.name == name:
+                return n
+        raise KeyError(name)
+
+    def cluster_repeats(self) -> list:
+        """Group structurally-identical consecutive nodes (paper §1 item 3:
+        'groups repeatedly occurred sub-structures to prune the search
+        space').  Two nodes are identical if their param/output signatures
+        and strategies match."""
+        groups: list = []
+        for n in self.nodes:
+            sig = (tuple((t.shape, str(t.dtype)) for t in n.params),
+                   tuple((t.shape, str(t.dtype)) for t in n.outputs),
+                   n.strategy_kinds())
+            if groups and groups[-1]["sig"] == sig:
+                groups[-1]["nodes"].append(n)
+            else:
+                groups.append({"sig": sig, "nodes": [n]})
+        return groups
+
+
+# ---------------------------------------------------------------------------
+# meta-driven FLOPs: walk a jaxpr, count dot/conv work, scale scans by length
+# ---------------------------------------------------------------------------
+
+def _dot_flops(eqn) -> int:
+    dnums = eqn.params["dimension_numbers"]
+    (lc, rc), (lb, rb) = dnums
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    k = math.prod(lhs.shape[i] for i in lc) if lc else 1
+    return 2 * math.prod(out.shape) * k
+
+
+def jaxpr_flops(jaxpr) -> int:
+    """Forward FLOPs of a closed jaxpr: dots + convs, recursing into
+    control flow with trip-count multipliers (scan length, while=1).
+
+    Generic recursion: any equation whose params carry a (list of) closed
+    jaxpr(s) is descended into — this covers pjit, remat/checkpoint,
+    custom_{jvp,vjp} wrappers and pallas grids regardless of the primitive
+    name du jour.
+    """
+    total = 0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            total += _dot_flops(eqn)
+        elif prim == "conv_general_dilated":
+            out = eqn.outvars[0].aval
+            lhs = eqn.invars[0].aval
+            rhs = eqn.invars[1].aval
+            total += 2 * math.prod(out.shape) * math.prod(rhs.shape[2:]) * lhs.shape[1]
+        elif prim == "scan":
+            inner = jaxpr_flops(eqn.params["jaxpr"].jaxpr)
+            total += inner * eqn.params["length"]
+        elif prim == "while":
+            total += jaxpr_flops(eqn.params["body_jaxpr"].jaxpr)
+        elif prim == "cond":
+            branches = eqn.params["branches"]
+            total += max(jaxpr_flops(b.jaxpr) for b in branches)
+        else:
+            for v in eqn.params.values():
+                for j in (v if isinstance(v, (tuple, list)) else (v,)):
+                    inner = getattr(j, "jaxpr", j)   # ClosedJaxpr or raw Jaxpr
+                    if hasattr(inner, "eqns"):
+                        total += jaxpr_flops(inner)
+    return total
+
+
+def capture_meta(fn: Callable, *args, logical_axes=None) -> tuple:
+    """eval_shape + jaxpr-FLOPs for `fn(*args)` — fully abstract."""
+    out_shape = jax.eval_shape(fn, *args)
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    flops = jaxpr_flops(jaxpr.jaxpr)
+
+    def metas(tree):
+        return [TensorMeta(tuple(x.shape), x.dtype) for x in jax.tree.leaves(tree)]
+
+    return metas(args), metas(out_shape), flops, out_shape

@@ -1,0 +1,170 @@
+"""GPipe pipeline parallelism over a ``stage`` mesh axis (paper Cases 3–4).
+
+TPU adaptation (DESIGN.md §2): Whale pipelines TF graph partitions with
+host-side queues; on TPU the native mechanism is a collective pipeline —
+stage parameters are sharded over a ``stage`` mesh axis inside a
+``shard_map`` (manual over ``stage``, GSPMD-auto over ``data``/``model`` so
+pipeline composes with DP and operator sharding, the paper's Case 4), and
+micro-batch activations move stage-to-stage with ``jax.lax.ppermute``.
+
+Schedule: classic GPipe.  With S stages and M micro-batches the forward runs
+T = M + S − 1 ticks; tick t has stage s working on micro-batch t − s (masked
+when out of range — that masking *is* the pipeline bubble).  ``jax.grad``
+differentiates straight through the schedule (the transpose of ``ppermute``
+is the reverse ``ppermute``), yielding the symmetric backward schedule;
+stage-replicated embed/head parameters get their cross-stage gradient
+``psum`` from the shard_map transpose automatically.
+
+The layer stack must divide evenly: ``n_rep % S == 0``; each stage owns
+``n_rep / S`` consecutive pattern repeats (Whale's "evenly partition the
+model into stages", §3.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.sharding import ShardingRules, use_rules
+from repro.models import layers, transformer as tfm
+from repro.models.lm import Model, chunked_xent
+
+
+def _is_axes(t) -> bool:
+    return isinstance(t, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in t)
+
+
+def staged_specs(rules: ShardingRules, axes_tree, shapes_tree):
+    """Specs from the rules, with the leading ``layers`` dim of stacked
+    params additionally sharded over the ``stage`` axis."""
+    def one(names, sds):
+        spec = rules.spec_for(names, sds.shape)
+        if names and names[0] == "layers":
+            return P(*(("stage",) + tuple(spec)[1:]))
+        return spec
+
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes)
+
+
+def stage_only_specs(axes_tree):
+    """shard_map in_specs: partial-manual mode may only name manual axes, so
+    these specs carry *just* the stage dim; data/model sharding stays GSPMD-
+    auto (applied at the jit level via :func:`staged_specs`)."""
+    def one(names):
+        if names and names[0] == "layers":
+            return P("stage")
+        return P()
+
+    return jax.tree.map(one, axes_tree, is_leaf=_is_axes)
+
+
+def make_gpipe_loss(model: Model, mesh: Mesh, rules: ShardingRules, *,
+                    micro_batches: int):
+    """→ (loss_fn(params, tokens), param PartitionSpecs).
+
+    ``params["blocks"]`` leaves are stage-sharded on their leading (layers)
+    dim; embed/head/norms are stage-replicated.  Differentiable; composes
+    with DP/TP because data/model axes stay GSPMD-auto inside the shard_map.
+    """
+    cfg = model.cfg
+    stack = model.stack
+    if stack is None:
+        raise ValueError("pipeline supports decoder-LM families only")
+    S = mesh.shape["stage"]
+    M = micro_batches
+    if stack.n_rep % S:
+        raise ValueError(f"n_rep={stack.n_rep} not divisible by {S} stages")
+    local_stack = dataclasses.replace(stack, n_rep=stack.n_rep // S)
+    norm = layers.make_norm(cfg.norm)[2]
+    perm = [(i, i + 1) for i in range(S - 1)]
+
+    def inner(params, tokens):
+        sid = jax.lax.axis_index("stage")
+        B, T = tokens.shape
+        mb = B // M
+        toks_mb = tokens.reshape(M, mb, T)
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (mb, T))
+        head_w = model._head_w(params).astype(cfg.adtype)
+
+        def tick(carry, t):
+            recv, loss_acc, n_acc, aux_acc = carry
+            # ---- stage 0 ingests micro-batch t; others take the wire ----
+            tok_in = jax.lax.dynamic_index_in_dim(
+                toks_mb, jnp.clip(t, 0, M - 1), axis=0, keepdims=False)
+            x0 = layers.embed(params["embed"], tok_in).astype(cfg.adtype)
+            x_in = jnp.where(sid == 0, x0, recv)
+            # ---- my slice of the stack ----
+            y, aux = tfm.apply_stack(params["blocks"], x_in, positions,
+                                     local_stack)
+            mb_here = t - sid                      # micro-batch at this stage
+            w_here = ((mb_here >= 0) & (mb_here < M)).astype(jnp.float32)
+            aux_acc = jax.tree.map(lambda a, d: a + w_here * d, aux_acc, aux)
+            # ---- last stage computes the loss for micro-batch t-(S-1) ----
+            out_mb = t - (S - 1)
+            lab_tok = jax.lax.dynamic_index_in_dim(
+                toks_mb, jnp.clip(out_mb, 0, M - 1), axis=0, keepdims=False)
+            xf = norm(params["final_norm"], y)
+            mask = jnp.ones((mb, T - 1), jnp.float32)
+            nll, zl, n = chunked_xent(
+                xf[:, :-1], head_w, lab_tok[:, 1:], mask, vocab=cfg.vocab,
+                chunk=cfg.loss_chunk, z_loss_coef=cfg.z_loss_coef)
+            w_out = (((out_mb >= 0) & (out_mb < M)) & (sid == S - 1)
+                     ).astype(jnp.float32)
+            loss_acc = loss_acc + w_out * (nll + zl)
+            n_acc = n_acc + w_out * n
+            # ---- ship activations down the pipe ----
+            recv_next = jax.lax.ppermute(y, "stage", perm)
+            return (recv_next, loss_acc, n_acc, aux_acc), None
+
+        recv0 = jnp.zeros((mb, T, cfg.d_model), cfg.adtype)
+        zero = jnp.zeros((), jnp.float32)
+        aux0 = {"lb_loss": zero, "z_loss": zero}
+        (_, loss_sum, n_sum, aux), _ = jax.lax.scan(
+            tick, (recv0, zero, zero, aux0), jnp.arange(M + S - 1))
+        # per-stage partial totals → global
+        loss_sum = jax.lax.psum(loss_sum, "stage")
+        n_sum = jax.lax.psum(n_sum, "stage")
+        aux = jax.tree.map(lambda a: jax.lax.psum(a, "stage") / M, aux)
+        return (loss_sum / jnp.maximum(n_sum, 1.0)
+                + aux["lb_loss"] + aux["z_loss"])
+
+    pspecs = staged_specs(rules, model.axes(), model.param_shapes())
+    sm_specs = stage_only_specs(model.axes())
+
+    def loss_fn(params, tokens):
+        with use_rules(rules):
+            return jax.shard_map(
+                inner, mesh=mesh, in_specs=(sm_specs, P()), out_specs=P(),
+                axis_names=frozenset({"stage"}), check_vma=False,
+            )(params, tokens)
+
+    return loss_fn, pspecs
+
+
+def make_gpipe_train_step(model: Model, mesh: Mesh, rules: ShardingRules,
+                          optimizer, *, micro_batches: int, donate=True):
+    """Jitted (params, opt_state, tokens, step) → (params, opt_state, loss)."""
+    loss_fn, pspecs = make_gpipe_loss(model, mesh, rules,
+                                      micro_batches=micro_batches)
+
+    def step_fn(params, opt_state, tokens, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens)
+        params, opt_state = optimizer.apply(grads, opt_state, params, step)
+        return params, opt_state, loss
+
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda t: isinstance(t, P))
+    psh = ns(pspecs)
+    ospecs = staged_specs(rules, optimizer.state_axes(model.axes()),
+                          jax.eval_shape(optimizer.init, model.param_shapes()))
+    data_ax = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tok_sh = NamedSharding(mesh, P(data_ax if len(data_ax) > 1 else
+                                   (data_ax[0] if data_ax else None)))
+    rep = NamedSharding(mesh, P())
+    return jax.jit(step_fn,
+                   in_shardings=(psh, ns(ospecs), tok_sh, rep),
+                   out_shardings=(psh, ns(ospecs), rep),
+                   donate_argnums=(0, 1) if donate else ())

@@ -1,0 +1,197 @@
+"""Whale strategy primitives (paper §2, Cases 1–5).
+
+Scopes are context managers that (a) record strategy annotations into the
+active Cluster's TaskGraph (the Whale IR) and (b) — for `replica` and
+`split` — immediately apply the corresponding GSPMD sharding constraints to
+tensors flowing through ``wh.sub``-wrapped subgraph calls.  `stage` /
+`pipeline` scopes record stage boundaries; the executable pipeline schedule
+is built by :mod:`repro.core.pipeline` from the recorded TaskGraph (JAX has
+no TF-style graph editing, so pipelining is a *construction*, not a rewrite —
+see DESIGN.md §2).
+
+    with wh.cluster(mesh_shape=(2, 4), axis_names=("data", "model")):
+        with wh.replica():                      # Case 1: data parallel
+            h = wh.sub("backbone", net)(p1, x)
+        with wh.split(dim=-1):                  # Case 2: + operator sharding
+            logits = wh.sub("fc", head)(p2, h)
+
+`auto_parallel` (Case 5) marks the graph for strategy search by
+:mod:`repro.core.auto`.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.ir import StrategyAnnotation, Subgraph, TaskGraph, capture_meta
+from repro.core.vdevice import Cluster
+
+_tls = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_tls, "scopes"):
+        _tls.scopes = []
+    return _tls.scopes
+
+
+class _Scope:
+    kind = "?"
+
+    def __init__(self, **options):
+        self.options = options
+
+    def __enter__(self):
+        _stack().append(StrategyAnnotation(self.kind, dict(self.options)))
+        return self
+
+    def __exit__(self, *exc):
+        _stack().pop()
+        return False
+
+
+class replica(_Scope):
+    """Data parallelism: batch dim replicated model, sharded data."""
+    kind = "replica"
+
+
+class split(_Scope):
+    """Operator sharding along `dim` of the subgraph output (paper Fig 4)."""
+    kind = "split"
+
+    def __init__(self, dim: int = -1):
+        super().__init__(dim=dim)
+
+
+class stage(_Scope):
+    """Model-parallel stage boundary (paper Case 3)."""
+    kind = "stage"
+    _counter = 0
+
+    def __enter__(self):
+        self.options["index"] = stage._counter
+        stage._counter += 1
+        return super().__enter__()
+
+
+class pipeline(_Scope):
+    """GPipe-style pipelining of enclosed stages (paper Case 4)."""
+    kind = "pipeline"
+
+    def __init__(self, micro_batch: int = 4):
+        super().__init__(micro_batch=micro_batch)
+        stage._counter = 0
+
+
+class auto_parallel(_Scope):
+    """Case 5: let the engine pick the strategy via the cost model."""
+    kind = "auto"
+
+
+def cluster(*args, **kwargs) -> Cluster:
+    return Cluster(*args, **kwargs)
+
+
+def current_annotations() -> list:
+    return list(_stack())
+
+
+# ---------------------------------------------------------------------------
+# wh.sub — subgraph capture + strategy application
+# ---------------------------------------------------------------------------
+
+def _data_axes(mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes or (mesh.axis_names[0],)
+
+
+def _model_axis(mesh):
+    return "model" if "model" in mesh.shape else mesh.axis_names[-1]
+
+
+def _constrain_tree(tree, spec_fn, mesh):
+    def f(x):
+        if not hasattr(x, "ndim") or x.ndim == 0:
+            return x
+        spec = spec_fn(x)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.tree.map(f, tree)
+
+
+def sub(name: str, fn):
+    """Wrap `fn` as a named Whale Subgraph.  Under an active cluster, calling
+    the wrapper records IR metadata (abstract — eval_shape + jaxpr FLOPs) and
+    applies the enclosing strategy's sharding constraints."""
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        cl = Cluster.current()
+        if cl is None:
+            return fn(*args, **kwargs)
+        anns = current_annotations()
+        inputs, outputs, flops, _ = capture_meta(
+            lambda *a: fn(*a, **kwargs), *args)
+        # convention: a leading dict positional arg is the param pytree —
+        # record its leaves as Subgraph.params (used by the auto-parallel
+        # cost path), the rest as data inputs.
+        params_meta, data_meta = [], inputs
+        if args and isinstance(args[0], dict):
+            n_param_leaves = len(jax.tree.leaves(args[0]))
+            params_meta = inputs[:n_param_leaves]
+            data_meta = inputs[n_param_leaves:]
+        sg = Subgraph(name=name, fn=fn, strategy=anns,
+                      inputs=data_meta, outputs=outputs, flops=flops,
+                      params=params_meta)
+        kinds = sg.strategy_kinds()
+        mesh = cl.mesh
+        if "stage" in kinds:
+            idx = next(a.options["index"] for a in anns if a.kind == "stage")
+            sg.vdevice = cl.stage_vd(idx)
+        elif "split" in kinds:
+            sg.vdevice = cl.split_vd()
+        elif "replica" in kinds:
+            sg.vdevice = cl.replica_vd()
+        cl.taskgraph.add(sg)
+
+        out = fn(*args, **kwargs)
+        if "split" in kinds:
+            dim = next(a.options["dim"] for a in anns if a.kind == "split")
+            ax = _model_axis(mesh)
+            da = _data_axes(mesh)
+
+            def spec(x):
+                parts = [None] * x.ndim
+                d = dim % x.ndim
+                if x.shape[d] % mesh.shape[ax] == 0:
+                    parts[d] = ax
+                if d != 0 and x.shape[0] % _axsize(mesh, da) == 0:
+                    parts[0] = da if len(da) > 1 else da[0]
+                return P(*parts)
+
+            out = _constrain_tree(out, spec, mesh)
+        elif "replica" in kinds:
+            da = _data_axes(mesh)
+
+            def spec(x):
+                if x.shape[0] % _axsize(mesh, da) != 0:
+                    return None
+                return P(da if len(da) > 1 else da[0],
+                         *([None] * (x.ndim - 1)))
+
+            out = _constrain_tree(out, spec, mesh)
+        return out
+
+    return wrapper
+
+
+def _axsize(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

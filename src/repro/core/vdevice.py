@@ -1,0 +1,88 @@
+"""Virtual devices (Whale abstraction #3).
+
+A :class:`VirtualDevice` is a named group of physical devices; a
+:class:`Cluster` owns the physical `jax.sharding.Mesh` and hands out virtual
+devices.  Strategy scopes attach subgraphs to virtual devices; the planner
+maps a virtual device onto mesh axes (replica groups ride the `data` axes,
+operator shards the `model` axis, pipeline stages a `stage` axis).
+
+On TPU the mesh-axis order *is* the topology mapping: minor axes are
+ICI-contiguous, the outermost (`pod`) axis crosses DCN — choosing which
+logical axis lands where is exactly Whale's "choose the proper VD for a
+Subgraph according to cluster topology".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualDevice:
+    """A logical device group = a sub-rectangle of the mesh."""
+    name: str
+    axes: tuple            # mesh axes this VD spans
+    index: int = 0         # which slice along the partitioning axis (stages)
+
+    def size(self, mesh: Mesh) -> int:
+        return int(np.prod([mesh.shape[a] for a in self.axes]))
+
+
+class Cluster:
+    """Physical cluster + virtual-device factory (Whale `wh.cluster`).
+
+    Also the ambient context that strategy scopes and `wh.sub` record into.
+    """
+
+    _active: list = []
+
+    def __init__(self, mesh: Mesh | None = None, *, mesh_shape: tuple | None = None,
+                 axis_names: tuple | None = None, layout: dict | None = None):
+        if mesh is None:
+            if mesh_shape is None:
+                n = len(jax.devices())
+                mesh_shape, axis_names = (n,), ("data",)
+            axis_names = axis_names or tuple(
+                f"ax{i}" for i in range(len(mesh_shape)))
+            mesh = jax.make_mesh(tuple(mesh_shape), tuple(axis_names))
+        self.mesh = mesh
+        self.layout = layout or {}
+        self.taskgraph = None   # filled by strategies.trace / scopes
+        self._scope_stack: list = []
+
+    # --- context management (the `with wh.cluster():` API) ---
+    def __enter__(self):
+        Cluster._active.append(self)
+        from repro.core.ir import TaskGraph
+        if self.taskgraph is None:
+            self.taskgraph = TaskGraph()
+        return self
+
+    def __exit__(self, *exc):
+        Cluster._active.pop()
+        return False
+
+    @classmethod
+    def current(cls) -> "Cluster | None":
+        return cls._active[-1] if cls._active else None
+
+    # --- virtual devices ---
+    def replica_vd(self) -> VirtualDevice:
+        axes = tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+        return VirtualDevice("replica", axes)
+
+    def split_vd(self) -> VirtualDevice:
+        ax = "model" if "model" in self.mesh.shape else self.mesh.axis_names[-1]
+        return VirtualDevice("split", (ax,))
+
+    def stage_vd(self, index: int) -> VirtualDevice:
+        ax = "stage" if "stage" in self.mesh.shape else self.mesh.axis_names[0]
+        return VirtualDevice(f"stage{index}", (ax,), index)
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.devices.size

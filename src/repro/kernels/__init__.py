@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+All kernels are TPU-targeted (pl.pallas_call + BlockSpec VMEM tiling) and
+validated in interpret mode on CPU against pure-jnp oracles (ref.py).
+"""

@@ -1,0 +1,131 @@
+"""Pallas TPU flash attention (forward): blocked online-softmax, causal GQA.
+
+TPU-native design (DESIGN.md §7):
+
+- Grid ``(B, K, nq)``: one program per (batch, kv-head, q-block).  The
+  kv-loop is a ``lax.fori_loop`` *inside* the kernel so the online-softmax
+  carry (m, l, acc) lives in VMEM registers/scratch for the whole row of
+  blocks — no HBM round-trips for the softmax state (the core flash idea,
+  re-blocked for the MXU instead of warps).
+- BlockSpecs deliver one ``(block_q, G·D)`` q tile and the *whole* kv rows
+  for that (batch, kv head) into VMEM; kv blocks are then sliced inside the
+  kernel.  With D=128 and block_k=512 the kv tile is 512×128×2×2 B = 256 KiB
+  — comfortably inside the ~16 MiB/core VMEM alongside the q tile and acc.
+- GQA: queries arrive pre-grouped as (B, S, K, G·D); the kernel contracts
+  (block_q·G, D) × (D, block_k) on the MXU — head-group packing keeps the
+  matmul M-dim a multiple of 8×G even for small q blocks.
+- Causality: programs where the whole q block precedes a kv block skip that
+  kv block entirely (the fori_loop upper bound is computed from the block
+  index — the "wedge"), matching the ~2× FLOP saving of the ref ``wedge``
+  path.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.attention_ref``
+over shape/dtype sweeps (tests/test_kernels.py); on-TPU the same code lowers
+to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+                      block_k: int, causal: bool, sk: int, group: int,
+                      head_dim: int):
+    """One (batch, kv-head, q-block) program.
+
+    q_ref: (block_q, G·D) VMEM tile
+    k_ref/v_ref: (Sk, D) VMEM rows for this (b, kv-head)
+    o_ref: (block_q, G·D)
+    """
+    qi = pl.program_id(2)
+    G, D = group, head_dim
+    q = q_ref[...].reshape(block_q, G, D).astype(jnp.float32)
+    q = q * (D ** -0.5)
+    # flatten (q, g) → rows so the MXU sees a (block_q·G, D) LHS
+    q2 = q.reshape(block_q * G, D)
+
+    nk_total = sk // block_k
+    if causal:
+        # q rows in this block span [qi·bq, (qi+1)·bq); kv block j is live
+        # iff j·bk <= last q row  →  wedge skipping of fully-masked blocks
+        nk = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k,
+                         nk_total)
+    else:
+        nk = nk_total
+
+    m0 = jnp.full((block_q * G,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q * G,), jnp.float32)
+    a0 = jnp.zeros((block_q * G, D), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kj = k_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        vj = v_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q2, kj, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, G), 0).reshape(block_q * G)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q * G, block_k), 1)
+            s = jnp.where(qpos[:, None] >= kpos, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, vj, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return m_new, l_new, acc_new
+
+    m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[...] = out.reshape(block_q, G * D).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False) -> jax.Array:
+    """q: (B, Sq, H, D)  k/v: (B, Sk, K, D) → (B, Sq, H, D).
+
+    Forward only (serving prefill / benchmark path; training uses the
+    jnp blocked ref whose backward comes from autodiff).
+    """
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(f"seq ({Sq},{Sk}) must divide blocks "
+                         f"({block_q},{block_k})")
+    nq = Sq // block_q
+
+    # layout: (B, S, K, G·D) so one BlockSpec index_map serves q and o
+    qr = q.reshape(B, Sq, K, G * D)
+
+    kernel = functools.partial(
+        _flash_fwd_kernel, block_q=block_q, block_k=block_k, causal=causal,
+        sk=Sk, group=G, head_dim=D)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, K, nq),
+        in_specs=[
+            pl.BlockSpec((None, block_q, None, G * D),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, Sk, None, D), lambda b, h, i: (b, 0, h, 0)),
+            pl.BlockSpec((None, Sk, None, D), lambda b, h, i: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, None, G * D),
+                               lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, K, G * D), q.dtype),
+        interpret=interpret,
+    )(qr, k, v)
+    return out.reshape(B, Sq, H, D)

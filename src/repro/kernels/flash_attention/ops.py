@@ -1,0 +1,17 @@
+"""Jit'd public wrapper for the Pallas flash-attention kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash(q, k, v, *, causal: bool = True, block_q: int = 128,
+          block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, D), k/v: (B, Sk, K, D) → (B, Sq, H, D)."""
+    return flash_attention(q, k, v, causal=causal, block_q=block_q,
+                           block_k=block_k, interpret=interpret)

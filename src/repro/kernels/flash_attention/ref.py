@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for blocked causal GQA attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True) -> jnp.ndarray:
+    """q: (B, Sq, H, D)  k/v: (B, Sk, K, D), H = K·G → (B, Sq, H, D).
+
+    Naive full-materialisation softmax attention in f32.
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.astype(jnp.float32).reshape(B, Sq, K, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) / (D ** 0.5)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

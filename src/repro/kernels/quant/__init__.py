@@ -1,0 +1,3 @@
+from repro.kernels.quant.ops import dequant, quant  # noqa: F401
+from repro.kernels.quant.quant import dequantize, quantize  # noqa: F401
+from repro.kernels.quant.ref import dequant_ref, quant_ref  # noqa: F401

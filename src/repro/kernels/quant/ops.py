@@ -1,0 +1,18 @@
+"""Jit'd wrappers for the quant kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.quant.quant import dequantize, quantize
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def quant(x, *, block: int = 256, interpret: bool = False):
+    return quantize(x, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def dequant(q, s, *, block: int = 256, interpret: bool = False):
+    return dequantize(q, s, block=block, interpret=interpret)

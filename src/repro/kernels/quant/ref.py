@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for per-block int8 quantize/dequantize."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quant_ref(x: jnp.ndarray, block: int = 256):
+    """x: (T,) f32 → (q (T,) int8, scales (T/block,) f32).
+
+    Symmetric per-block scaling: s = max|x_block| / 127, q = round(x/s).
+    """
+    T = x.shape[0]
+    nb = T // block
+    xb = x.astype(jnp.float32).reshape(nb, block)
+    s = jnp.max(jnp.abs(xb), axis=1) / 127.0
+    s = jnp.maximum(s, 1e-30)
+    q = jnp.clip(jnp.round(xb / s[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(T), s
+
+
+def dequant_ref(q: jnp.ndarray, s: jnp.ndarray, block: int = 256):
+    nb = s.shape[0]
+    return (q.astype(jnp.float32).reshape(nb, block) * s[:, None]).reshape(-1)

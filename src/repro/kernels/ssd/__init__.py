@@ -1,0 +1,3 @@
+from repro.kernels.ssd.ops import ssd  # noqa: F401
+from repro.kernels.ssd.ref import ssd_ref  # noqa: F401
+from repro.kernels.ssd.ssd import ssd_scan_pallas  # noqa: F401

@@ -1,0 +1,14 @@
+"""Jit'd public wrapper for the Pallas SSD kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd.ssd import ssd_scan_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,G,N) → (y, final_state)."""
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the SSD (state-space dual) chunked scan.
+
+Sequential (per-token) recurrence — the unambiguous ground truth:
+    h_t = exp(dt_t · A) · h_{t-1} + dt_t · B_t ⊗ x_t
+    y_t = C_t · h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+            Bm: jnp.ndarray, Cm: jnp.ndarray,
+            h0: jnp.ndarray | None = None):
+    """x: (B, S, H, P)  dt: (B, S, H)  A: (H,)  Bm/Cm: (B, S, G, N).
+
+    Returns y: (B, S, H, P) f32 and final state (B, H, P, N) f32.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm.astype(jnp.float32), rep, axis=2)    # (B, S, H, N)
+    Ch = jnp.repeat(Cm.astype(jnp.float32), rep, axis=2)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dA = jnp.exp(dtf * A[None, None, :])                    # (B, S, H)
+
+    def step(h, inp):
+        xt, dAt, dtt, Bt, Ct = inp
+        h = h * dAt[..., None, None] + (
+            dtt[..., None, None] * xt[..., None] * Bt[:, :, None, :])
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ct)
+        return h, y
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32) if h0 is None else h0
+    hT, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dA, 1, 0),
+         jnp.moveaxis(dtf, 1, 0), jnp.moveaxis(Bh, 1, 0),
+         jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), hT

@@ -1,0 +1,127 @@
+"""Pallas TPU SSD (state-space duality) chunked-scan kernel.
+
+Mamba2's SSD decomposes the linear recurrence into (i) an intra-chunk
+*quadratic dual form* — dense (Q, Q) decay-masked attention that runs on the
+MXU — and (ii) an inter-chunk state recurrence with O(state) carry.  GPU
+implementations split this into 4-5 separate kernels + a host-level scan;
+on TPU we fuse everything into ONE grid walk:
+
+- Grid ``(B, H, L)`` with L (chunk index) as the *minor* sequential axis:
+  TPU grid steps execute in order, so the running state h ∈ (P, N) lives in
+  a VMEM scratch buffer across chunk steps — the inter-chunk recurrence
+  costs zero HBM traffic (the GPU version round-trips states through HBM).
+- Per program: load the chunk's (Q, P) x-tile and (Q, N) B/C tiles, build
+  the (Q, Q) decay mask from the dt cumsum, do the three MXU matmuls
+  (CBᵀ∘L)·x, state read C·h, and state update Bᵀ·(decay∘x).
+- Chunk Q defaults to 128: the (Q, Q) mask matmul and (Q, N)×(N, P)
+  contractions are all 128-aligned for the MXU.
+
+Validated in interpret mode against the sequential-scan oracle (ref.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_scr,
+                *, chunk: int, headdim: int, d_state: int):
+    """Program (b, h, l): one chunk of one head of one batch row.
+
+    x_ref: (Q, P)  dt_ref: (Q,)  a_ref: (1,)  b_ref/c_ref: (Q, N)
+    y_ref: (Q, P)  hout_ref: (P, N)  h_scr: (P, N) VMEM carry.
+    """
+    li = pl.program_id(2)
+    nl = pl.num_programs(2)
+    Q, P, N = chunk, headdim, d_state
+
+    @pl.when(li == 0)
+    def _init():
+        h_scr[...] = jnp.zeros((P, N), jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)              # (Q, P)
+    dt = dt_ref[...].astype(jnp.float32)            # (Q,)
+    A = a_ref[0]                                    # scalar (negative)
+    Bm = b_ref[...].astype(jnp.float32)             # (Q, N)
+    Cm = c_ref[...].astype(jnp.float32)             # (Q, N)
+
+    dA = dt * A                                     # (Q,) ≤ 0
+    cum = jnp.cumsum(dA)                            # (Q,)
+    # intra-chunk decay mask  L[i, j] = exp(cum_i − cum_j) · (i ≥ j)
+    seg = cum[:, None] - cum[None, :]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jota = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    Lmask = jnp.where(iota >= jota, jnp.exp(seg), 0.0)
+
+    xd = x * dt[:, None]                            # dt-weighted input
+    # --- dual quadratic form on the MXU ---
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jax.lax.dot_general(scores * Lmask, xd,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, P)
+    # --- carried-state contribution: y_off = (C · h) ∘ exp(cum) ---
+    h = h_scr[...]                                  # (P, N)
+    y_off = jax.lax.dot_general(Cm, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # (Q, P)
+    y_ref[...] = (y_diag + y_off * jnp.exp(cum)[:, None]).astype(y_ref.dtype)
+
+    # --- state update: h' = exp(sum dA) · h + Σ_q exp(cum_Q − cum_q) Bq ⊗ xdq
+    total = cum[Q - 1]
+    decay_to_end = jnp.exp(total - cum)             # (Q,)
+    state_upd = jax.lax.dot_general(
+        xd * decay_to_end[:, None], Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)         # (P, N)
+    h_new = h * jnp.exp(total) + state_upd
+    h_scr[...] = h_new
+
+    @pl.when(li == nl - 1)
+    def _emit():
+        hout_ref[...] = h_new
+
+
+def ssd_scan_pallas(x: jax.Array, dt: jax.Array, A: jax.Array,
+                    Bm: jax.Array, Cm: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False):
+    """x: (B, S, H, P)  dt: (B, S, H)  A: (H,)  Bm/Cm: (B, S, G, N).
+
+    → (y (B, S, H, P) f32, final state (B, H, P, N) f32).
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    chunk = min(chunk, S)
+    if S % chunk:
+        raise ValueError(f"S={S} must divide chunk={chunk}")
+    L = S // chunk
+    rep = H // G
+    if rep > 1:   # broadcast groups to heads for uniform BlockSpecs
+        Bm = jnp.repeat(Bm, rep, axis=2)
+        Cm = jnp.repeat(Cm, rep, axis=2)
+
+    grid = (Bsz, H, L)
+    y, hT = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk, headdim=P, d_state=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, None, P), lambda b, h, l: (b, l, h, 0)),
+            pl.BlockSpec((None, chunk, None), lambda b, h, l: (b, l, h)),
+            pl.BlockSpec((1,), lambda b, h, l: (h,)),
+            pl.BlockSpec((None, chunk, None, N), lambda b, h, l: (b, l, h, 0)),
+            pl.BlockSpec((None, chunk, None, N), lambda b, h, l: (b, l, h, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((None, chunk, None, P), lambda b, h, l: (b, l, h, 0)),
+            pl.BlockSpec((None, None, P, N), lambda b, h, l: (b, h, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((Bsz, S, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H, P, N), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, hT

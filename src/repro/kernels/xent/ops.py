@@ -1,0 +1,66 @@
+"""Public wrapper for the fused xent kernel with an analytic custom VJP.
+
+Forward: the Pallas kernel (never materialises (T, V) logits).
+Backward: d_logits = softmax − onehot(label); dh = d_logits @ Wᵀ and
+dW = hᵀ @ d_logits are computed *tile-by-tile over the vocab* with the saved
+(lse) — logits are recomputed per tile, so the backward has the same O(T·E +
+E·V) HBM profile as the forward (flash-style recompute-in-backward, here in
+plain jnp over vocab chunks since the contraction itself is a plain matmul
+XLA already runs at roofline).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.xent.xent import xent_fwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def xent(hidden, head_w, labels, vocab=None, block_t=128, block_v=512,
+         interpret=False):
+    """hidden (T, E), head_w (E, V), labels (T,) → nll (T,) fp32."""
+    nll, _ = xent_fwd(hidden, head_w, labels, vocab=vocab, block_t=block_t,
+                      block_v=block_v, interpret=interpret)
+    return nll
+
+
+def _fwd(hidden, head_w, labels, vocab, block_t, block_v, interpret):
+    nll, lse = xent_fwd(hidden, head_w, labels, vocab=vocab, block_t=block_t,
+                        block_v=block_v, interpret=interpret)
+    return nll, (hidden, head_w, labels, lse)
+
+
+def _bwd(vocab, block_t, block_v, interpret, res, g):
+    hidden, head_w, labels, lse = res
+    T, E = hidden.shape
+    V = head_w.shape[1]
+    vocab_ = vocab or V
+    nvc = max(V // max(block_v, 1), 1)
+    chunk = V // nvc
+    hf = hidden.astype(jnp.float32)
+    col0 = jnp.arange(chunk)
+
+    def tile(i, carry):
+        dh, dw = carry
+        w_t = jax.lax.dynamic_slice(head_w, (0, i * chunk), (E, chunk)) \
+            .astype(jnp.float32)
+        logits = hf @ w_t
+        col = col0[None, :] + i * chunk
+        p = jnp.where(col < vocab_,
+                      jnp.exp(logits - lse[:, None]), 0.0)       # softmax tile
+        p = p - jnp.where(col == labels[:, None], 1.0, 0.0)      # − onehot
+        p = p * g[:, None]                                       # chain rule
+        dh = dh + p @ w_t.T
+        dw = jax.lax.dynamic_update_slice(dw, hf.T @ p, (0, i * chunk))
+        return dh, dw
+
+    dh0 = jnp.zeros((T, E), jnp.float32)
+    dw0 = jnp.zeros((E, V), jnp.float32)
+    dh, dw = jax.lax.fori_loop(0, nvc, tile, (dh0, dw0))
+    return dh.astype(hidden.dtype), dw.astype(head_w.dtype), None
+
+
+xent.defvjp(_fwd, _bwd)

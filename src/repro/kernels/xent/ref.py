@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for fused vocab-tiled softmax cross-entropy."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def xent_ref(hidden: jnp.ndarray, head_w: jnp.ndarray, labels: jnp.ndarray,
+             *, vocab: int | None = None):
+    """hidden: (T, E)  head_w: (E, V)  labels: (T,) → (nll (T,), lse (T,)).
+
+    Full-materialisation reference: logits = h @ W, nll = lse − logit[label].
+    ``vocab``: mask columns ≥ vocab (padded head).
+    """
+    logits = (hidden.astype(jnp.float32) @ head_w.astype(jnp.float32))
+    V = head_w.shape[1]
+    if vocab is not None and vocab < V:
+        col = jnp.arange(V)
+        logits = jnp.where(col[None, :] < vocab, logits, -1e30)
+    m = logits.max(axis=-1)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1)) + m
+    correct = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return lse - correct, lse

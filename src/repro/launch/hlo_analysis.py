@@ -1,0 +1,299 @@
+"""Post-SPMD HLO accounting: trip-count-aware collective byte volumes.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, so any
+scanned program (layer scan, micro-batch accumulation, loss chunking — i.e.
+every production training step) under-reports FLOPs/bytes/collectives by the
+trip count.  This module parses the optimized HLO text, recovers each loop's
+trip count from its condition computation (the `constant(N)` bound the
+induction variable is compared against), and accumulates per-collective byte
+volumes recursively through while/call/conditional bodies.
+
+Used by the dry-run/roofline harness for the *collective* term, which is the
+one quantity only the post-SPMD artifact knows (the SPMD partitioner decides
+which collectives exist).  FLOPs use the trip-count-exact jaxpr walk
+(:func:`repro.core.ir.jaxpr_flops`) instead — see EXPERIMENTS.md §Roofline
+for the methodology note.
+
+Ring-collective cost accounting per device (n = replica-group size):
+  all-reduce          2·(n−1)/n · result bytes
+  all-gather          (n−1)/n   · result bytes   (result = gathered tensor)
+  reduce-scatter      (n−1)     · result bytes   (result = one shard)
+  all-to-all          (n−1)/n   · result bytes
+  collective-permute  1         · result bytes
+"""
+from __future__ import annotations
+
+import re
+from typing import Mapping
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.+-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=%?([\w.+-]+), body=%?([\w.+-]+)")
+_CALL_RE = re.compile(r"\bcall\(.*?\), to_apply=%?([\w.+-]+)")
+_COND_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s32\[\] constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+
+def parse_computations(hlo: str) -> dict:
+    """HLO module text → {computation name: [body lines]}."""
+    comps: dict = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m and "->" in line:
+                cur = m.group(1)
+                comps[cur] = []
+        else:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                                    # iota [n_groups, group_size]
+        return int(m.group(2))
+    return default
+
+
+def trip_count(cond_lines: list) -> int:
+    """Loop bound from the condition computation: max s32 constant (the
+    induction bound; conservative fallback 1 when nothing is found)."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _direct_collectives(lines: list, n_dev: int) -> dict:
+    out = dict.fromkeys(COLLECTIVE_KINDS, 0.0)
+    counts = dict.fromkeys(COLLECTIVE_KINDS, 0)
+    for line in lines:
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        kind = m.group(2)
+        if kind == "all-gather" and m.group(3):
+            # all-gather-start result tuple includes the operand copy; halve
+            b = b / 2
+        n = _group_size(line, n_dev)
+        if n <= 1:
+            continue
+        if kind == "all-reduce":
+            moved = 2.0 * (n - 1) / n * b
+        elif kind == "all-gather":
+            moved = (n - 1) / n * b
+        elif kind == "reduce-scatter":
+            moved = float(n - 1) * b
+        elif kind == "all-to-all":
+            moved = (n - 1) / n * b
+        else:
+            moved = float(b)
+        out[kind] += moved
+        counts[kind] += 1
+    out["_counts"] = counts
+    return out
+
+
+def collective_bytes(hlo: str, n_dev: int) -> dict:
+    """Per-device collective bytes for the whole module, loops unrolled.
+
+    Returns {kind: bytes, 'total': float, 'counts': {kind: static op count}}.
+    """
+    comps = parse_computations(hlo)
+    memo: dict = {}
+
+    def visit(name: str, stack: frozenset) -> Mapping:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return dict.fromkeys(COLLECTIVE_KINDS, 0.0)
+        lines = comps[name]
+        acc = _direct_collectives(lines, n_dev)
+        acc.pop("_counts", None)
+        stack = stack | {name}
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                cond, body = m.group(1), m.group(2)
+                trips = trip_count(comps.get(cond, []))
+                sub = visit(body, stack)
+                for k in COLLECTIVE_KINDS:
+                    acc[k] += trips * sub[k]
+                continue
+            m = _CALL_RE.search(line)
+            if m:
+                sub = visit(m.group(1), stack)
+                for k in COLLECTIVE_KINDS:
+                    acc[k] += sub[k]
+            m = _COND_BRANCH_RE.search(line)
+            if m:
+                branches = [b.strip().lstrip("%") for b in
+                            m.group(1).split(",")]
+                subs = [visit(b, stack) for b in branches]
+                for k in COLLECTIVE_KINDS:
+                    acc[k] += max((s[k] for s in subs), default=0.0)
+        memo[name] = acc
+        return acc
+
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:                         # fall back: flat accounting
+        flat = _direct_collectives(hlo.splitlines(), n_dev)
+        counts = flat.pop("_counts")
+        flat["total"] = sum(flat.values())
+        flat["counts"] = counts
+        return flat
+
+    total = visit(entry, frozenset())
+    counts = _direct_collectives(
+        [l for ls in comps.values() for l in ls], n_dev).pop("_counts")
+    result = dict(total)
+    result["total"] = sum(total[k] for k in COLLECTIVE_KINDS)
+    result["counts"] = counts
+    return result
+
+
+# ---------------------------------------------------------------------------
+# HBM traffic: trip-aware materialisation accounting
+# ---------------------------------------------------------------------------
+
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%[\w.+-]+\s*=\s*"
+                    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]\S*))\s+"
+                    r"([\w-]+)")
+
+# ops that produce no real HBM materialisation
+_FREE_OPS = {"get-tuple-element", "tuple", "bitcast", "constant", "iota",
+             "after-all", "partition-id", "replica-id", "parameter",
+             "while", "call", "conditional"}   # counted via their bodies
+
+_FUSION_CALLS_RE = re.compile(r"\bfusion\(.*?calls=%?([\w.+-]+)")
+
+
+def _fusion_write_bytes(result_bytes: float, fusion_comp: list) -> float:
+    """Write volume of one fusion.  In-place dynamic-update-slice fusions
+    write only the updated slice: charge the sum of the fusion's *non-
+    largest* parameters (≈ the update operands) instead of the aliased
+    full-buffer result."""
+    has_dus = any("dynamic-update-slice(" in l or "scatter(" in l
+                  for l in fusion_comp)
+    if not has_dus:
+        return result_bytes
+    params = sorted((_shape_bytes(m.group(1))
+                     for l in fusion_comp
+                     if (m := _OP_RE.match(l)) and m.group(2) == "parameter"),
+                    reverse=True)
+    if len(params) <= 1:
+        return result_bytes
+    slice_bytes = float(sum(params[1:]))
+    return min(result_bytes, slice_bytes)
+
+
+def hbm_traffic_bytes(hlo: str) -> float:
+    """Per-device HBM traffic estimate for the module, loops unrolled.
+
+    Model: each top-level (post-fusion) value is written to HBM once and
+    read ~once (×2); fusion internals stay in VMEM/registers; in-place
+    update fusions write the slice, not the buffer; ENTRY parameters are
+    read once; while-body parameters are the resident carry (no traffic —
+    the slices read from them are separate, counted ops)."""
+    comps = parse_computations(hlo)
+    memo: dict = {}
+
+    def direct(lines: list) -> float:
+        total = 0.0
+        for line in lines:
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            if op in _FREE_OPS:
+                continue
+            b = float(_shape_bytes(shape_str))
+            if op == "fusion":
+                fm = _FUSION_CALLS_RE.search(line)
+                body = comps.get(fm.group(1), []) if fm else []
+                b = _fusion_write_bytes(b, body)
+            elif op in ("dynamic-update-slice", "scatter"):
+                b = 0.0      # unfused DUS: slice operands counted upstream
+            total += 2.0 * b
+        return total
+
+    def visit(name: str, stack: frozenset) -> float:
+        if name in memo:
+            return memo[name]
+        if name not in comps or name in stack:
+            return 0.0
+        lines = comps[name]
+        acc = direct(lines)
+        stack = stack | {name}
+        for line in lines:
+            m = _WHILE_RE.search(line)
+            if m:
+                trips = trip_count(comps.get(m.group(1), []))
+                acc += trips * visit(m.group(2), stack)
+                continue
+            m = _CALL_RE.search(line)
+            if m:
+                acc += visit(m.group(1), stack)
+            m = _COND_BRANCH_RE.search(line)
+            if m:
+                branches = [b.strip().lstrip("%") for b in
+                            m.group(1).split(",")]
+                acc += max((visit(b, stack) for b in branches), default=0.0)
+        memo[name] = acc
+        return acc
+
+    entry = None
+    entry_params = 0.0
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = _HEADER_RE.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        return direct(hlo.splitlines())
+    for line in comps.get(entry, []):
+        m = _OP_RE.match(line)
+        if m and m.group(2) == "parameter":
+            entry_params += _shape_bytes(m.group(1))
+    return visit(entry, frozenset()) + entry_params

@@ -1,0 +1,48 @@
+"""STUB modality frontends (per assignment: the transformer backbone is the
+deliverable; vision/audio towers provide *precomputed* embeddings).
+
+``input_specs`` supplies (B, P, D) patch embeddings (qwen2-vl) or
+(B, S_src, D) frame embeddings (seamless).  The stub applies one trainable
+linear adapter so the frontend participates in the parameter/sharding story
+without pretending to be a real ViT/conformer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def init_adapter(key, d_model: int, dtype) -> dict:
+    return {"w": layers.dense_init(key, d_model, (d_model, d_model), dtype),
+            "b": jnp.zeros((d_model,), dtype)}
+
+
+def axes_adapter() -> dict:
+    return {"w": ("embed", None), "b": (None,)}
+
+
+def adapt(params: dict, embeds: jax.Array) -> jax.Array:
+    return embeds @ params["w"].astype(embeds.dtype) + params["b"].astype(embeds.dtype)
+
+
+def mrope_positions(batch: int, seq: int, n_patches: int, grid: int | None = None
+                    ) -> jax.Array:
+    """qwen2-vl style (B, 3, S) positions: (t, h, w) grid over the patch
+    prefix, then text positions continuing from the max patch position."""
+    if n_patches == 0:
+        p = jnp.broadcast_to(jnp.arange(seq)[None, None], (batch, 3, seq))
+        return p
+    g = grid or max(int(n_patches ** 0.5), 1)
+    idx = jnp.arange(n_patches)
+    t = jnp.zeros_like(idx)
+    h = idx // g
+    w = idx % g
+    text = jnp.arange(seq - n_patches) + (n_patches // g)  # continue after max(h,w)
+    pos3 = jnp.stack([
+        jnp.concatenate([t, text]),
+        jnp.concatenate([h, text]),
+        jnp.concatenate([w, text]),
+    ])                                                      # (3, S)
+    return jnp.broadcast_to(pos3[None], (batch, 3, seq))

@@ -1,0 +1,210 @@
+"""Core neural-net layers shared by every assigned architecture.
+
+Functional style: ``init_*`` functions build param pytrees (plain dicts);
+``axes_*`` functions build *logical-axis* pytrees with the same treedef whose
+leaves are tuples of logical dimension names.  The logical names are Whale's
+"Multi-Dimension" abstraction: the planner (``repro.core.sharding``) maps them
+onto physical mesh axes per strategy, so models never mention mesh axes.
+
+Logical axis vocabulary
+-----------------------
+  layers      stacked scan dimension (never sharded)
+  embed       d_model
+  vocab       vocabulary / class dimension (operator-split target, paper Fig 4)
+  q_heads     attention query heads (tensor-parallel target)
+  kv_heads    attention kv heads
+  head_dim    per-head feature dim
+  mlp         feed-forward hidden dim (tensor-parallel target)
+  experts     MoE expert dim (expert-parallel target)
+  ssm_heads   mamba2 SSD head dim
+  conv / state / proj  mamba internals
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any  # nested dict pytree
+Axes = Any    # same-treedef pytree of tuples of logical-axis names
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, dtype, stddev):
+    return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+
+def dense_init(key, in_dim: int, shape: tuple, dtype) -> jax.Array:
+    """Fan-in scaled normal init (truncation omitted; irrelevant for systems work)."""
+    return _normal(key, shape, dtype, 1.0 / math.sqrt(max(in_dim, 1)))
+
+
+def embed_init(key, shape: tuple, dtype) -> jax.Array:
+    return _normal(key, shape, dtype, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def axes_rmsnorm() -> Axes:
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def axes_layernorm() -> Axes:
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(params: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def make_norm(kind: str):
+    if kind == "rms":
+        return init_rmsnorm, axes_rmsnorm, rmsnorm
+    if kind == "ln":
+        return init_layernorm, axes_layernorm, layernorm
+    raise ValueError(f"unknown norm {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim//2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0,
+               mrope_sections: tuple | None = None) -> jax.Array:
+    """Rotate ``x`` (..., S, H, D) by ``positions``.
+
+    positions: (B, S) for standard RoPE, or (B, 3, S) for M-RoPE
+    (temporal/height/width sections, qwen2-vl style).  With M-RoPE the
+    frequency bands are partitioned into ``mrope_sections`` (summing to D//2)
+    and each band uses its own position component.
+    """
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                                    # (d/2,)
+    if mrope_sections is None:
+        ang = positions[..., None].astype(jnp.float32) * inv      # (B, S, d/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE wants (B, 3, S) positions"
+        parts = []
+        off = 0
+        for i, sec in enumerate(mrope_sections):
+            p = positions[:, i, :, None].astype(jnp.float32)      # (B, S, 1)
+            parts.append(p * inv[off:off + sec])
+            off += sec
+        ang = jnp.concatenate(parts, axis=-1)                     # (B, S, d/2)
+    cos = jnp.cos(ang)[..., None, :]                              # (B, S, 1, d/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs: SwiGLU / GeGLU / plain
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "wi": dense_init(k1, d_model, (d_model, d_ff), dtype),
+        "wo": dense_init(k2, d_ff, (d_ff, d_model), dtype),
+    }
+    if gated:
+        p["wg"] = dense_init(k3, d_model, (d_model, d_ff), dtype)
+    return p
+
+
+def axes_mlp(gated: bool = True) -> Axes:
+    a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if gated:
+        a["wg"] = ("embed", "mlp")
+    return a
+
+
+_ACTS: dict[str, Callable] = {
+    "silu": jax.nn.silu,
+    "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+    "relu": jax.nn.relu,
+}
+
+
+def mlp(params: Params, x: jax.Array, act: str = "silu") -> jax.Array:
+    h = x @ params["wi"].astype(x.dtype)
+    if "wg" in params:
+        h = _ACTS[act](x @ params["wg"].astype(x.dtype)) * h
+    else:
+        h = _ACTS[act](h)
+    return h @ params["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings + LM head
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype) -> Params:
+    # 1/sqrt(d) init keeps tied-head logits O(1); a norm layer follows the
+    # embedding in every family, so the small output scale is harmless.
+    return {"table": _normal(key, (vocab, d_model), dtype,
+                             1.0 / math.sqrt(d_model))}
+
+
+def axes_embedding() -> Axes:
+    return {"table": ("vocab", "embed")}
+
+
+def embed(params: Params, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params: Params, x: jax.Array) -> jax.Array:
+    """Project activations to (padded) vocab logits with the transposed table."""
+    return x @ params["table"].T.astype(x.dtype)
+
+
+def init_lm_head(key, d_model: int, vocab: int, dtype) -> Params:
+    return {"w": dense_init(key, d_model, (d_model, vocab), dtype)}
+
+
+def axes_lm_head() -> Axes:
+    return {"w": ("embed", "vocab")}
+
+
+def lm_head(params: Params, x: jax.Array) -> jax.Array:
+    return x @ params["w"].astype(x.dtype)
+
+
+def pad_vocab(vocab: int, multiple: int = 256) -> int:
+    """Pad vocab to an MXU/shard-friendly multiple (Megatron-style)."""
+    return ((vocab + multiple - 1) // multiple) * multiple

@@ -1,0 +1,3 @@
+from repro.optim.optimizer import (Optimizer, Schedule, adafactor,  # noqa: F401
+                                   adamw, clip_by_global_norm, get_optimizer,
+                                   global_norm, sgd)

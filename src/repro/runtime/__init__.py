@@ -1,0 +1,5 @@
+"""Runtime services: fault tolerance, straggler mitigation, elastic scaling."""
+from repro.runtime.elastic import ElasticContext, shrink_devices  # noqa: F401
+from repro.runtime.fault_tolerance import FaultTolerantLoop  # noqa: F401
+from repro.runtime.straggler import (HostStragglerAggregator,  # noqa: F401
+                                     StragglerMonitor)

@@ -1,0 +1,62 @@
+"""Elastic re-meshing: restart the job at a different device count.
+
+Checkpoints are mesh-agnostic (full logical arrays + logical axis names), so
+scaling in/out is: build the new mesh → rebuild the plan (ShardingRules give
+the new PartitionSpecs; divisibility pruning silently drops shardings that
+no longer divide) → ``CheckpointManager.restore`` with the new shardings.
+The batch schedule is kept consistent by preserving *global* batch size —
+dp changes only the per-device slice.
+
+This is the homogeneous-pod replacement for Whale-ATC'22's heterogeneous
+load balancing (DESIGN.md §2): a flagged straggler host is excluded and the
+job resumes on the surviving N−k hosts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.planner import ExecutionPlan, compile_plan
+from repro.core.cost_model import StrategySpec
+
+
+def _ns(mesh, specs):
+    import jax.sharding as shd
+    return jax.tree.map(lambda s: shd.NamedSharding(mesh, s), specs,
+                        is_leaf=lambda t: isinstance(t, shd.PartitionSpec))
+
+
+@dataclasses.dataclass
+class ElasticContext:
+    """Rebuild (plan, params, opt_state) from a checkpoint on a new mesh."""
+    model: Any
+    optimizer: Any
+
+    def remesh(self, ckpt: CheckpointManager, new_mesh,
+               strategy: StrategySpec | None = None):
+        """→ (step, plan, params, opt_state, extra) on ``new_mesh``.
+
+        Raises FileNotFoundError when no committed checkpoint exists.
+        """
+        plan = compile_plan(self.model, new_mesh, strategy=strategy)
+        p_shapes = plan.param_shapes
+        o_shapes = jax.eval_shape(self.optimizer.init, p_shapes)
+        target = {"params": p_shapes, "opt": o_shapes}
+        shardings = {
+            "params": _ns(new_mesh, plan.param_specs),
+            "opt": _ns(new_mesh, plan.opt_specs(self.optimizer)),
+        }
+        out = ckpt.restore_latest(target, shardings=shardings)
+        if out is None:
+            raise FileNotFoundError(
+                f"no committed checkpoint in {ckpt.directory}")
+        step, tree, extra = out
+        return step, plan, tree["params"], tree["opt"], extra
+
+
+def shrink_devices(devices, exclude_hosts: set):
+    """Filter a device list to exclude flagged hosts (straggler eviction)."""
+    return [d for d in devices if d.process_index not in exclude_hosts]

@@ -1,0 +1,99 @@
+"""Fault tolerance: auto-resume, signal-triggered checkpoint, bounded retry.
+
+The training driver (``launch/train.py``) wraps its step loop in
+:class:`FaultTolerantLoop`:
+
+- **auto-resume** — on start, the latest *committed* checkpoint (model +
+  optimizer + data-pipeline state) is restored; a preempted/failed job
+  relaunched by the cluster scheduler continues where it left off.
+- **SIGTERM flush** — preemption notices trigger a final synchronous
+  checkpoint before exit (TPU pods surface maintenance events as SIGTERM).
+- **bounded retry** — transient step failures (in production: DCN flakes,
+  preempted reductions) retry the step up to ``max_retries`` times from the
+  last good in-memory state; persistent failure re-raises after a final
+  checkpoint so the scheduler can reschedule, possibly at a different scale
+  (see :mod:`repro.runtime.elastic`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Any, Callable
+
+from repro.ckpt.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class FaultTolerantLoop:
+    ckpt: CheckpointManager
+    save_every: int = 100
+    max_retries: int = 3
+    async_save: bool = True
+
+    def __post_init__(self):
+        self._term_requested = False
+        self._prev_handlers = {}
+
+    # --- signal handling ---
+    def _on_term(self, signum, frame):
+        self._term_requested = True
+
+    def install_signal_handlers(self) -> None:
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            self._prev_handlers[sig] = signal.signal(sig, self._on_term)
+
+    def restore_signal_handlers(self) -> None:
+        for sig, h in self._prev_handlers.items():
+            signal.signal(sig, h)
+
+    # --- the loop ---
+    def run(self, *, state: Any, step_fn: Callable, n_steps: int,
+            start_step: int = 0, extra_fn: Callable | None = None,
+            on_step: Callable | None = None) -> tuple:
+        """Run ``state = step_fn(step, state)`` for steps [start, n_steps).
+
+        ``extra_fn(state) -> dict`` supplies non-array state (data pipeline
+        position etc.) for each checkpoint.  Returns (final_step, state).
+        """
+        self.install_signal_handlers()
+        step = start_step
+        try:
+            while step < n_steps:
+                retries = 0
+                while True:
+                    try:
+                        t0 = time.monotonic()
+                        state = step_fn(step, state)
+                        dt = time.monotonic() - t0
+                        break
+                    except (RuntimeError, ValueError):
+                        retries += 1
+                        if retries > self.max_retries:
+                            self._final_save(step, state, extra_fn)
+                            raise
+                if on_step is not None:
+                    on_step(step, state, dt)
+                step += 1
+                if step % self.save_every == 0:
+                    self._save(step, state, extra_fn)
+                if self._term_requested:
+                    self._final_save(step, state, extra_fn)
+                    break
+            else:
+                self._final_save(step, state, extra_fn)
+        finally:
+            self.ckpt.wait()
+            self.restore_signal_handlers()
+        return step, state
+
+    def _save(self, step, state, extra_fn):
+        extra = extra_fn(state) if extra_fn else {}
+        if self.async_save:
+            self.ckpt.save_async(step, state, extra=extra)
+        else:
+            self.ckpt.save(step, state, extra=extra)
+
+    def _final_save(self, step, state, extra_fn):
+        self.ckpt.wait()
+        self.ckpt.save(step, state, extra=extra_fn(state) if extra_fn else {})

@@ -1,0 +1,73 @@
+"""Straggler detection: per-step timing, EMA outlier flagging, mitigation.
+
+The ATC'22 Whale balances *heterogeneous* GPUs by skewing work; TPU pods are
+homogeneous, so the production analogue (DESIGN.md §2) is detecting a *slow*
+host (failing HBM, thermal throttle, noisy neighbour on DCN) and evicting it
+via elastic re-mesh.  The monitor keeps an EMA + variance of step times and
+flags sustained outliers; in a multi-host deployment each host reports its
+local step time and the controller aggregates (single-process here: the
+aggregation path is exercised with synthetic per-host timings in tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    ema_decay: float = 0.9
+    threshold: float = 2.0        # flag when t > mean + threshold·std
+    patience: int = 3             # consecutive outliers before flagging
+    warmup: int = 5               # ignore the first steps (compile etc.)
+
+    def __post_init__(self):
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+        self.consecutive = 0
+        self.flagged = False
+
+    def observe(self, dt: float) -> bool:
+        """Record one step time; returns True if a straggler is flagged."""
+        self.n += 1
+        if self.n <= self.warmup:
+            self.mean = dt if self.n == 1 else (
+                self.mean + (dt - self.mean) / self.n)
+            return False
+        std = math.sqrt(max(self.var, 1e-12))
+        is_out = dt > self.mean + self.threshold * max(std, 0.05 * self.mean)
+        if is_out:
+            self.consecutive += 1
+        else:
+            self.consecutive = 0
+        if self.consecutive >= self.patience:
+            self.flagged = True
+        # EMA update (outliers excluded so one bad host can't drag the mean)
+        if not is_out:
+            d = self.ema_decay
+            delta = dt - self.mean
+            self.mean += (1 - d) * delta
+            self.var = d * (self.var + (1 - d) * delta * delta)
+        return self.flagged
+
+
+@dataclasses.dataclass
+class HostStragglerAggregator:
+    """Controller view: one monitor per host; decides eviction."""
+    n_hosts: int
+    threshold: float = 2.0
+    patience: int = 3
+
+    def __post_init__(self):
+        self.monitors = {h: StragglerMonitor(threshold=self.threshold,
+                                             patience=self.patience)
+                         for h in range(self.n_hosts)}
+
+    def observe(self, host_times: dict) -> list:
+        """host_id → step time; returns hosts flagged for replacement."""
+        flagged = []
+        for h, t in host_times.items():
+            if self.monitors[h].observe(t):
+                flagged.append(h)
+        return flagged

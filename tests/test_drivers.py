@@ -1,0 +1,38 @@
+"""End-to-end driver tests: train.py (with resume) and serve.py as CLIs."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_cli(args, devices: int = 2, timeout: int = 540):
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    p = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                       text=True, timeout=timeout, env=env, cwd=ROOT)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+@pytest.mark.slow
+def test_train_driver_then_resume(tmp_path):
+    common = ["repro.launch.train", "--arch", "tinyllama-1.1b", "--smoke",
+              "--batch", "4", "--seq", "64", "--save-every", "4",
+              "--ckpt-dir", str(tmp_path), "--log-every", "4"]
+    out1 = run_cli(common + ["--steps", "6"])
+    assert "[done] step 6" in out1
+    out2 = run_cli(common + ["--steps", "10"])
+    assert "[resume] from step 6" in out2
+    assert "[done] step 10" in out2
+
+
+@pytest.mark.slow
+def test_serve_driver(tmp_path):
+    out = run_cli(["repro.launch.serve", "--arch", "tinyllama-1.1b",
+                   "--smoke", "--requests", "4", "--batch-slots", "2",
+                   "--gen", "4", "--prompt-len", "8", "--max-len", "16"])
+    assert "[serve] 4 requests" in out

@@ -1,0 +1,177 @@
+"""Per-arch smoke: reduced config, one train step + one decode step on CPU."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.configs import shapes as sh
+from repro.models.lm import build, chunked_xent, param_count
+
+
+def _is_axes(t):
+    return isinstance(t, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in t)
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_train_step(arch, key):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(key)
+    assert param_count(params) > 0
+    cell = sh.ShapeCell("t", "train", 64, 2)
+    batch = sh.make_synthetic_batch(model, cell, key)
+    loss, metrics = jax.jit(model.loss_fn)(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss {loss}"
+    assert float(metrics["tokens"]) > 0
+    # grads exist and are finite for every leaf
+    g = jax.grad(lambda p: model.loss_fn(p, batch)[0])(params)
+    for path, leaf in jax.tree_util.tree_flatten_with_path(g)[0]:
+        assert bool(jnp.all(jnp.isfinite(leaf))), (arch, path)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_decode_step(arch, key):
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    params = model.init(key)
+    state = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                         model.decode_state_shapes(2, 16))
+    logits, state2 = jax.jit(model.serve_step)(
+        params, jnp.zeros((2,), jnp.int32), state)
+    assert logits.shape == (2, cfg.padded_vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    # state treedef preserved
+    assert jax.tree.structure(state) == jax.tree.structure(state2)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_axes_tree_matches_params(arch, key):
+    """Every param leaf has a logical-axes annotation of the right rank."""
+    cfg = get_config(arch, smoke=True)
+    model = build(cfg)
+    shapes = model.param_shapes()
+    axes = model.axes()
+    leaves_s, td_s = jax.tree.flatten(shapes)
+    leaves_a = td_s.flatten_up_to(
+        jax.tree.map(lambda t: t, axes, is_leaf=_is_axes))
+    for s, a in zip(leaves_s, leaves_a):
+        assert _is_axes(a)
+        assert len(a) == len(s.shape), (arch, a, s.shape)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-1.3b",
+                                  "seamless-m4t-medium"])
+def test_prefill_then_decode_consistent(arch, key):
+    """greedy(prefill → decode) == greedy(full forward) for the next token."""
+    cfg = dataclasses.replace(get_config(arch, smoke=True), dtype="float32")
+    model = build(cfg)
+    params = model.init(key)
+    cell = sh.ShapeCell("t", "train", 32, 2)
+    batch = sh.make_synthetic_batch(model, cell, key)
+    logits, state = model.prefill(params, batch, gen_budget=8)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    tok = jnp.argmax(logits[:, :cfg.vocab], -1).astype(jnp.int32)
+    logits2, state = model.serve_step(params, tok, state)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment table."""
+    c = get_config("deepseek-moe-16b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.vocab) == (28, 2048, 16, 102400)
+    assert (c.n_experts, c.top_k, c.n_shared) == (64, 6, 2)
+    c = get_config("grok-1-314b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (64, 6144, 48, 8)
+    assert (c.d_ff_expert, c.vocab, c.n_experts, c.top_k) == (32768, 131072, 8, 2)
+    c = get_config("stablelm-3b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (32, 2560, 32, 6912, 50304)
+    c = get_config("gemma-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads) == (18, 2048, 8, 1)
+    assert (c.d_ff, c.vocab, c.hd) == (16384, 256000, 256)
+    c = get_config("tinyllama-1.1b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (22, 2048, 32, 4, 5632, 32000)
+    c = get_config("qwen3-1.7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (28, 2048, 16, 8, 6144, 151936)
+    assert c.qk_norm
+    c = get_config("qwen2-vl-2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (28, 1536, 12, 2, 8960, 151936)
+    assert c.mrope_sections is not None
+    c = get_config("mamba2-1.3b")
+    assert (c.n_layers, c.d_model, c.vocab, c.ssd_state) == \
+        (48, 2048, 50280, 128)
+    c = get_config("seamless-m4t-medium")
+    assert (c.d_model, c.n_heads, c.d_ff, c.vocab) == (1024, 16, 4096, 256206)
+    assert (c.n_enc_layers, c.n_dec_layers) == (12, 12)
+    c = get_config("jamba-v0.1-52b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 4096, 32, 8, 14336, 65536)
+    assert (c.n_experts, c.top_k, c.attn_period) == (16, 2, 8)
+
+
+def test_int8_kv_cache_matches_bf16_decode(key):
+    """int8 KV serving: greedy tokens identical, logits within 2%."""
+    cfg = dataclasses.replace(get_config("qwen3-1.7b", smoke=True),
+                              dtype="float32")
+    cfg8 = dataclasses.replace(cfg, kv_cache_dtype="int8")
+    m, m8 = build(cfg), build(cfg8)
+    params = m.init(key)
+    s = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                     m.decode_state_shapes(2, 16))
+    s8 = jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype),
+                      m8.decode_state_shapes(2, 16))
+    assert any(l.dtype == jnp.int8 for l in jax.tree.leaves(s8))
+    toks = jnp.zeros((2,), jnp.int32)
+    for _ in range(4):
+        lo, s = m.serve_step(params, toks, s)
+        lo8, s8 = m8.serve_step(params, toks, s8)
+        rel = float(jnp.abs(lo - lo8).max() / jnp.abs(lo).max())
+        assert rel < 0.02, rel
+        assert bool((jnp.argmax(lo, -1) == jnp.argmax(lo8, -1)).all())
+        toks = jnp.argmax(lo[:, :cfg.vocab], -1).astype(jnp.int32)
+
+
+def test_chunked_xent_equals_full_softmax():
+    """The Fig-4 loss path == naive full-logits cross entropy."""
+    key = jax.random.key(7)
+    B, T, E, V, Vp = 2, 48, 32, 100, 128
+    h = jax.random.normal(key, (B, T, E))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, Vp)) * 0.2
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (B, T), 0, V)
+    mask = (jax.random.uniform(jax.random.fold_in(key, 3), (B, T)) > 0.3
+            ).astype(jnp.float32)
+    nll, zl, n = chunked_xent(h, w, labels, mask, vocab=V, chunk=16,
+                              z_loss_coef=0.0)
+    logits = (h @ w).astype(jnp.float32)
+    logits = jnp.where(jnp.arange(Vp)[None, None] < V, logits, -1e30)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    correct = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    ref = ((lse - correct) * mask).sum()
+    np.testing.assert_allclose(float(nll), float(ref), rtol=1e-5)
+    np.testing.assert_allclose(float(n), float(mask.sum()), rtol=1e-6)
+
+
+def test_chunked_xent_ragged_tail():
+    """T not divisible by chunk: padded tokens must not contribute."""
+    key = jax.random.key(8)
+    B, T, E, Vp = 1, 50, 16, 64
+    h = jax.random.normal(key, (B, T, E))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (E, Vp)) * 0.2
+    labels = jax.random.randint(jax.random.fold_in(key, 2), (B, T), 0, Vp)
+    mask = jnp.ones((B, T), jnp.float32)
+    nll16, _, n16 = chunked_xent(h, w, labels, mask, vocab=Vp, chunk=16)
+    nll50, _, n50 = chunked_xent(h, w, labels, mask, vocab=Vp, chunk=50)
+    np.testing.assert_allclose(float(nll16), float(nll50), rtol=1e-5)
+    assert float(n16) == float(n50) == 50.0

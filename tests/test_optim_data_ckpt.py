@@ -1,0 +1,242 @@
+"""Optimizers, gradient compression, data pipeline, checkpointing, runtime."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.pipeline import DataCfg, PipelineState, TokenPipeline
+from repro.optim.grad_compress import (dequantize_int8, init_error_tree,
+                                       quantize_int8)
+from repro.optim.optimizer import (Schedule, adafactor, adamw,
+                                   clip_by_global_norm, global_norm)
+from repro.runtime.fault_tolerance import FaultTolerantLoop
+from repro.runtime.straggler import HostStragglerAggregator, StragglerMonitor
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    return {"a": jnp.ones((4, 8)), "b": {"c": jnp.full((3,), 2.0)}}
+
+
+def test_adamw_reduces_quadratic():
+    opt = adamw(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for i in range(200):
+        g = {"w": 2 * params["w"]}
+        params, state = opt.apply(g, state, params, i)
+    assert float(jnp.abs(params["w"]).max()) < 0.05
+
+
+def test_adafactor_state_is_factored_and_matches_axes():
+    opt = adafactor(lr=0.01)
+    params = {"w": jnp.ones((8, 16)), "v1": jnp.ones((5,)),
+              "g1": jnp.ones((4, 1, 16))}      # size-1 dim (jamba wB case)
+    state = opt.init(params)
+    assert set(state["v"]["w"]) == {"vr", "vc"}
+    assert set(state["v"]["v1"]) == {"v"}
+    assert set(state["v"]["g1"]) == {"vr", "vc"}
+    axes = opt.state_axes({"w": ("embed", "mlp"), "v1": ("embed",),
+                           "g1": ("a", "b", "c")})
+    # structures agree (the jamba multi-pod regression)
+    assert jax.tree.structure(
+        jax.tree.map(lambda x: 0, state,
+                     is_leaf=lambda t: isinstance(t, jnp.ndarray))) == \
+        jax.tree.structure(jax.tree.map(lambda t: 0, axes,
+                                        is_leaf=lambda t: isinstance(t, tuple)))
+    g = jax.tree.map(jnp.ones_like, params)
+    p2, s2 = opt.apply(g, state, params, 0)
+    assert jax.tree.structure(p2) == jax.tree.structure(params)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(global_norm(clipped)), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(float(norm), 6.0, rtol=1e-6)
+
+
+def test_schedule_warmup_and_decay():
+    s = Schedule(base_lr=1.0, warmup=10, decay_steps=100, min_ratio=0.1)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(100)) == pytest.approx(0.1, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (error feedback)
+# ---------------------------------------------------------------------------
+
+def test_quantize_int8_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).standard_normal(1000) * 3,
+                    jnp.float32)
+    q, s, err = quantize_int8(x)
+    xd = dequantize_int8(q, s)
+    assert float(jnp.abs(xd - x).max()) <= float(s) + 1e-6
+    np.testing.assert_allclose(np.asarray(xd + err), np.asarray(x),
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_feedback_mean_converges(seed):
+    """Property: with error feedback, the time-average of the compressed
+    signal converges to the true mean (bias is carried, not lost)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64).astype(np.float32) * 0.01)
+    err = jnp.zeros_like(x)
+    total = jnp.zeros_like(x)
+    n = 40
+    for _ in range(n):
+        q, s, err = quantize_int8(x, err)
+        total = total + dequantize_int8(q, s)
+    np.testing.assert_allclose(np.asarray(total / n), np.asarray(x),
+                               atol=float(jnp.abs(x).max()) / 100 + 1e-5)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataCfg(global_batch=8, seq_len=16, vocab=100, seed=3)
+    p1 = TokenPipeline(cfg, host_id=0, n_hosts=1)
+    batches = [p1.next_batch()["tokens"] for _ in range(5)]
+    # resume from step 3
+    p2 = TokenPipeline(cfg, host_id=0, n_hosts=1)
+    for _ in range(3):
+        p2.next_batch()
+    st3 = p2.state_dict()
+    p3 = TokenPipeline(cfg, host_id=0, n_hosts=1)
+    p3.load_state_dict(st3)
+    np.testing.assert_array_equal(p3.next_batch()["tokens"], batches[3])
+    np.testing.assert_array_equal(p3.next_batch()["tokens"], batches[4])
+
+
+def test_pipeline_host_shards_disjoint():
+    cfg = DataCfg(global_batch=8, seq_len=16, vocab=1000, seed=1)
+    a = TokenPipeline(cfg, host_id=0, n_hosts=2).next_batch()["tokens"]
+    b = TokenPipeline(cfg, host_id=1, n_hosts=2).next_batch()["tokens"]
+    assert a.shape == b.shape == (4, 16)
+    assert not np.array_equal(a, b)
+
+
+def test_pipeline_tokens_in_vocab():
+    cfg = DataCfg(global_batch=4, seq_len=64, vocab=97, seed=0)
+    t = TokenPipeline(cfg).next_batch()["tokens"]
+    assert t.min() >= 0 and t.max() < 97
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "n": {"b": jnp.ones(4)}}
+    for step in (10, 20, 30):
+        mgr.save(step, jax.tree.map(lambda x: x * step, tree),
+                 extra={"step": step})
+    assert mgr.all_steps() == [20, 30]          # keep=2
+    restored, extra = mgr.restore(30, tree)
+    np.testing.assert_allclose(restored["w"], tree["w"] * 30)
+    assert extra["step"] == 30
+
+
+def test_ckpt_ignores_uncommitted(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=5)
+    tree = {"w": jnp.ones(3)}
+    mgr.save(1, tree)
+    # simulate a crash mid-write: directory exists, no COMMITTED marker
+    os.makedirs(tmp_path / "step_00000002")
+    assert mgr.latest_step() == 1
+
+
+def test_ckpt_async_then_restore(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    tree = {"w": jnp.full((5,), 7.0)}
+    mgr.save_async(5, tree)
+    mgr.wait()
+    out = mgr.restore_latest(tree)
+    assert out is not None
+    step, restored, _ = out
+    assert step == 5
+    np.testing.assert_allclose(restored["w"], tree["w"])
+
+
+def test_ckpt_shape_mismatch_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        mgr.restore(1, {"w": jnp.ones((3, 3))})
+
+
+# ---------------------------------------------------------------------------
+# runtime: fault tolerance + straggler
+# ---------------------------------------------------------------------------
+
+def test_ft_loop_retries_then_succeeds(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    fails = {"n": 2}
+
+    def step_fn(i, state):
+        if i == 3 and fails["n"]:
+            fails["n"] -= 1
+            raise RuntimeError("transient")
+        return {"v": state["v"] + 1}
+
+    loop = FaultTolerantLoop(mgr, save_every=100, max_retries=3,
+                             async_save=False)
+    final, state = loop.run(state={"v": jnp.zeros(())}, step_fn=step_fn,
+                            n_steps=5)
+    assert final == 5 and float(state["v"]) == 5.0
+
+
+def test_ft_loop_persistent_failure_saves_and_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+
+    def bad(i, state):
+        raise RuntimeError("dead host")
+
+    loop = FaultTolerantLoop(mgr, save_every=100, max_retries=1,
+                             async_save=False)
+    with pytest.raises(RuntimeError):
+        loop.run(state={"v": jnp.zeros(())}, step_fn=bad, n_steps=3)
+    assert mgr.latest_step() == 0               # final save happened
+
+
+def test_ft_loop_checkpoints_every_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=10)
+    loop = FaultTolerantLoop(mgr, save_every=2, async_save=False)
+    loop.run(state={"v": jnp.zeros(())},
+             step_fn=lambda i, s: {"v": s["v"] + 1}, n_steps=5)
+    assert 2 in mgr.all_steps() and 4 in mgr.all_steps()
+    assert 5 in mgr.all_steps()                 # final flush
+
+
+def test_straggler_monitor_flags_sustained_outlier():
+    m = StragglerMonitor(patience=3, warmup=3)
+    flagged = False
+    for _ in range(10):
+        flagged = m.observe(0.10 + np.random.default_rng(0).normal() * 1e-3)
+    assert not flagged
+    for _ in range(3):
+        flagged = m.observe(0.50)
+    assert flagged
+
+
+def test_straggler_aggregator_identifies_host():
+    agg = HostStragglerAggregator(n_hosts=4, patience=2)
+    for step in range(12):
+        times = {h: 0.1 for h in range(4)}
+        if step >= 6:
+            times[2] = 0.4                      # host 2 goes slow
+        flagged = agg.observe(times)
+    assert flagged == [2]
