@@ -1,0 +1,132 @@
+"""Paper §5 / Fig. 7 — hardware-aware balancing on heterogeneous GPUs.
+
+Whale's headline heterogeneity claim: on a cluster mixing GPU generations,
+the hardware-aware strategy (micro-batch shares ∝ each group's effective
+FLOP/s, pipeline stages sized so per-stage latency equalizes) clearly beats
+the naive even split, which makes every synchronous step wait for the
+slowest card.  The paper reports up to ~1.4× from balancing alone on mixed
+V100/P100 pools.
+
+This benchmark reproduces the claim from the analytic cost model
+(meta-driven — nothing executes): a Bert-Large-class workload on clusters
+mixing V100 with T4- and P100-class pods, comparing
+
+- ``naive``:  even batch shares / even layer split (hardware-oblivious)
+- ``aware``:  :func:`repro.core.hetero.plan_placement` balanced placement
+
+for both balancing mechanisms (intra-stage DP batch split and inter-stage
+pipeline layer allocation), plus the end-to-end auto-search over the mixed
+cluster.  Sanity anchor: a homogeneous cluster must show speedup exactly
+1.0 (the balanced placement reduces to the even split).
+
+Output: CSV rows ``fig7,<mode>,<cluster>,<naive_ms>,<aware_ms>,<speedup>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.auto import search
+from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
+                                   StrategySpec, T4_16G, V100_PAPER,
+                                   lm_workload_meta)
+from repro.core.hetero import plan_placement
+
+
+def bert_large_cfg():
+    from repro.configs import get_config
+    return dataclasses.replace(
+        get_config("stablelm-3b"), n_layers=24, d_model=1024, n_heads=16,
+        n_kv_heads=16, head_dim=64, d_ff=4096, vocab=30522, norm="ln",
+        act="gelu", gated_mlp=False, remat="none", name="bert-large")
+
+
+CLUSTERS = {
+    "8xV100+8xT4": ClusterSpec(groups=(
+        DeviceGroup("v100", V100_PAPER, 8),
+        DeviceGroup("t4", T4_16G, 8))),
+    "8xV100+8xP100": ClusterSpec(groups=(
+        DeviceGroup("v100", V100_PAPER, 8),
+        DeviceGroup("p100", P100_16G, 8))),
+    "12xV100+4xT4": ClusterSpec(groups=(
+        DeviceGroup("v100", V100_PAPER, 12),
+        DeviceGroup("t4", T4_16G, 4))),
+    "16xV100(homog)": ClusterSpec.homogeneous(V100_PAPER, 16),
+}
+
+
+def compare(meta, strat, spec, overlap=0.5):
+    """(naive_step_s, aware_step_s) for one strategy on one cluster."""
+    naive = plan_placement(meta, strat, spec, overlap=overlap,
+                           balanced=False)
+    aware = plan_placement(meta, strat, spec, overlap=overlap)
+    return naive, aware
+
+
+def rows(per_gpu_batch: int = 24, seq: int = 128):
+    cfg = bert_large_cfg()
+    out = []
+    for cname, spec in CLUSTERS.items():
+        meta = lm_workload_meta(cfg, batch=per_gpu_batch * spec.n_devices,
+                                seq=seq)
+        # mechanism 1: intra-stage DP batch balancing
+        dp = StrategySpec(dp=spec.n_devices, remat=False, vocab_split=False)
+        naive, aware = compare(meta, dp, spec)
+        out.append(("dp-batch-split", cname, naive.step_time,
+                    aware.step_time, aware))
+        # mechanism 2: inter-stage pipeline layer balancing (4 stages)
+        pp = StrategySpec(dp=spec.n_devices // 4, pp=4, micro_batches=4,
+                          remat=False, vocab_split=False)
+        naive, aware = compare(meta, pp, spec)
+        out.append(("pipeline-layers", cname, naive.step_time,
+                    aware.step_time, aware))
+    return out
+
+
+def auto_rows(per_gpu_batch: int = 24, seq: int = 128):
+    """End-to-end: the auto-search picks a balanced strategy for the mix."""
+    cfg = bert_large_cfg()
+    out = []
+    for cname, spec in CLUSTERS.items():
+        meta = lm_workload_meta(cfg, batch=per_gpu_batch * spec.n_devices,
+                                seq=seq)
+        cands = search(meta, spec, top_k=1, overlap=0.5)
+        if cands:
+            out.append((cname, cands[0].strategy.describe(),
+                        cands[0].total, cands[0].placement))
+    return out
+
+
+def main(csv=True) -> list:
+    out = []
+    for mode, cname, t_naive, t_aware, aware in rows():
+        out.append(("fig7", mode, cname, t_naive * 1e3, t_aware * 1e3,
+                    t_naive / t_aware))
+    if csv:
+        print("table,mode,cluster,naive_ms,aware_ms,speedup")
+        for r in out:
+            print(f"{r[0]},{r[1]},{r[2]},{r[3]:.1f},{r[4]:.1f},{r[5]:.3f}")
+        hetero = [r for r in out if "homog" not in r[2]]
+        homog = [r for r in out if "homog" in r[2]]
+        best = max(r[5] for r in hetero)
+        print(f"# headline: hardware-aware up to {best:.2f}× over naive even "
+              f"split on mixed clusters (paper §5: balanced > even)")
+        # never-worse everywhere (the even split is in the balancer's search
+        # space); strictly better on the headline mixed V100/T4 cluster.
+        # Comm-bound memory-capped corners (12xV100+4xT4 pure DP on shared
+        # Ethernet) legitimately tie: the all-reduce dominates and HBM caps
+        # pin the shares at the even point.
+        assert all(r[5] >= 1.0 - 1e-9 for r in hetero), \
+            "hardware-aware must never lose to the naive split"
+        headline = [r for r in out if r[2] == "8xV100+8xT4"]
+        assert all(r[5] > 1.0 for r in headline), \
+            "hardware-aware must beat the naive split on the mixed V100/T4 cluster"
+        assert all(abs(r[5] - 1.0) < 1e-9 for r in homog), \
+            "homogeneous cluster must reduce exactly to the even split"
+        print("table,cluster,auto_strategy,step_ms,placement")
+        for cname, desc, t, pl in auto_rows():
+            print(f"fig7-auto,{cname},{desc},{t*1e3:.1f},{pl.describe() if pl else ''}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,7 @@
 Sections:
   fig2      Bert-Large HDP vs Whale DP vs Whale pipeline (paper Fig. 2)
   fig5      100k-class DP vs DP+split hybrid             (paper Fig. 5)
+  fig7      hardware-aware vs naive split on mixed GPUs  (paper §5)
   kernels   Pallas kernel numerics vs oracle + VMEM budget
   roofline  per-(arch × shape × mesh) table from the dry-run JSONL
 """
@@ -40,6 +41,11 @@ def main() -> None:
     print("== fig5: 100k-class hybrid (paper Fig. 5) ==")
     import benchmarks.fig5_classification as fig5
     fig5.main()
+
+    print("=" * 72)
+    print("== fig7: heterogeneous hardware-aware balancing (paper §5) ==")
+    import benchmarks.fig7_heterogeneous as fig7
+    fig7.main()
 
     print("=" * 72)
     print("== kernels: Pallas vs oracle ==")

@@ -32,4 +32,12 @@ for name in ARCH_NAMES:
                      isinstance(e, (str, type(None))) for e in t))
     print(f"{name:24s} params={n:9d} loss={float(loss):8.4f} "
           f"({time.time()-t0:.1f}s)")
+
+# heterogeneous planner smoke: the fig7 benchmark's analytic comparison
+# (hardware-aware vs naive even split) with its built-in assertions
+import os
+import sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+import benchmarks.fig7_heterogeneous as fig7
+fig7.main()
 print("ALL OK")

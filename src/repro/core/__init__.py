@@ -9,9 +9,13 @@ The user-facing surface mirrors the paper's API (``import repro as wh``):
             logits = wh.sub("fc", head)(head_params, h)
 """
 from repro.core.auto import auto_parallel, meta_from_taskgraph, search  # noqa: F401
-from repro.core.cost_model import (Hardware, StrategySpec, TPU_V5E,  # noqa: F401
+from repro.core.cost_model import (ClusterSpec, DeviceGroup, Hardware,  # noqa: F401
+                                   P100_16G, StrategySpec, T4_16G, TPU_V5E,
                                    V100_PAPER, WorkloadMeta, lm_workload_meta,
                                    step_cost, throughput)
+from repro.core.hetero import (HeteroPlacement, balance_batch,  # noqa: F401
+                               balance_stages, hetero_step_cost,
+                               plan_placement)
 from repro.core.ir import Subgraph, TaskGraph, TensorMeta, capture_meta  # noqa: F401
 from repro.core.planner import (ExecutionPlan, compile_plan,  # noqa: F401
                                 compile_plan_from_cluster, mesh_for_strategy,

@@ -17,6 +17,14 @@ pruned strategy space and rank by the cost model:
 
 Returns the ranked candidates so callers can inspect the frontier (the
 EXPERIMENTS.md §Auto table does exactly this).
+
+**Heterogeneous clusters** (DESIGN.md §2): ``search`` / ``auto_parallel``
+accept a :class:`~repro.core.cost_model.ClusterSpec` in place of the plain
+device count.  The enumeration is then additionally pruned to placements
+that tile every hardware group (no shard straddles a group boundary), each
+candidate is balanced by :mod:`repro.core.hetero` (throughput-proportional
+batch shares / latency-equalized stage layers), priced per group with the
+slowest group dominating, and discarded if any group's HBM overflows.
 """
 from __future__ import annotations
 
@@ -24,8 +32,9 @@ import dataclasses
 import math
 from typing import Iterable
 
-from repro.core.cost_model import (CostBreakdown, Hardware, StrategySpec,
-                                   TPU_V5E, WorkloadMeta, step_cost)
+from repro.core.cost_model import (ClusterSpec, CostBreakdown, Hardware,
+                                   StrategySpec, TPU_V5E, WorkloadMeta,
+                                   step_cost)
 
 
 def divisors(n: int) -> list:
@@ -37,17 +46,26 @@ def divisors(n: int) -> list:
 class Candidate:
     strategy: StrategySpec
     cost: CostBreakdown
+    placement: object = None    # hetero.HeteroPlacement on mixed clusters
 
     @property
     def total(self) -> float:
         return self.cost.total
 
 
-def enumerate_strategies(meta: WorkloadMeta, devices: int, *,
+def enumerate_strategies(meta: WorkloadMeta, devices, *,
                          max_tp: int = 16, max_pp: int | None = None,
                          micro_options: Iterable | None = None,
                          ) -> list:
-    """Pruned (dp, tp, pp, micro, zero, vocab_split) enumeration."""
+    """Pruned (dp, tp, pp, micro, zero, vocab_split) enumeration.
+
+    ``devices`` may be a plain count or a :class:`ClusterSpec`; the latter
+    adds the group-tiling prune (shards never straddle a hardware group).
+    """
+    spec = devices if isinstance(devices, ClusterSpec) else None
+    if spec is not None:
+        from repro.core.hetero import strategy_fits_cluster
+        devices = spec.n_devices
     max_pp = max_pp or min(meta.n_layers, 16)
     out = []
     for tp in divisors(devices):
@@ -59,6 +77,9 @@ def enumerate_strategies(meta: WorkloadMeta, devices: int, *,
                 continue
             dp = rest // pp
             if meta.batch % dp:
+                continue
+            if spec is not None and not strategy_fits_cluster(
+                    StrategySpec(dp=dp, tp=tp, pp=pp), spec):
                 continue
             micros = micro_options or [m for m in (1, 2, 4, 8, 16, 32)
                                        if meta.batch // dp >= m]
@@ -72,14 +93,28 @@ def enumerate_strategies(meta: WorkloadMeta, devices: int, *,
     return out
 
 
-def search(meta: WorkloadMeta, devices: int, hw: Hardware = TPU_V5E, *,
+def search(meta: WorkloadMeta, devices, hw: Hardware = TPU_V5E, *,
            top_k: int = 5, overlap: float = 0.5, **enum_kw) -> list:
     """Rank the pruned strategy space by estimated step time.
 
     Returns the ``top_k`` feasible :class:`Candidate`s, best first.
+    ``devices`` may be a :class:`ClusterSpec` (mixed hardware); ``hw`` is
+    then ignored and each candidate is balanced + priced per device group
+    (candidates carry their :class:`HeteroPlacement`).
     """
+    spec = devices if isinstance(devices, ClusterSpec) else None
     cands = []
     for strat in enumerate_strategies(meta, devices, **enum_kw):
+        if spec is not None:
+            from repro.core.hetero import plan_placement
+            try:
+                pl = plan_placement(meta, strat, spec, overlap=overlap)
+            except ValueError:      # no HBM-feasible balance exists
+                continue
+            if pl.cost.feasible:
+                cands.append(Candidate(strategy=strat, cost=pl.cost,
+                                       placement=pl))
+            continue
         c = step_cost(meta, strat, hw, overlap=overlap)
         if c.feasible:
             cands.append(Candidate(strategy=strat, cost=c))
@@ -87,13 +122,18 @@ def search(meta: WorkloadMeta, devices: int, hw: Hardware = TPU_V5E, *,
     return cands[:top_k]
 
 
-def auto_parallel(meta: WorkloadMeta, devices: int,
+def auto_parallel(meta: WorkloadMeta, devices,
                   hw: Hardware = TPU_V5E, **kw) -> StrategySpec:
     """The one-liner of Case 5: pick the best strategy, raise if none fits."""
     best = search(meta, devices, hw, top_k=1, **kw)
     if not best:
+        if isinstance(devices, ClusterSpec):
+            where = "+".join(f"{g.n_devices}×{g.hw.name}"
+                             for g in devices.groups)
+        else:
+            where = f"{devices}×{hw.name}"
         raise RuntimeError(
-            f"no feasible strategy for {meta.name} on {devices}×{hw.name}")
+            f"no feasible strategy for {meta.name} on {where}")
     return best[0].strategy
 
 

@@ -24,9 +24,17 @@ metadata"):
 - ``M_peak``: params + optimizer state + gradients (each divided by the axes
   that shard them) + activation working set (micro-batched, remat-aware).
 
-Two hardware tables ship: TPU_V5E (the target) and V100_16G/ETH35 (the
-paper's own cluster — used by benchmarks/fig2 & fig5 to check the cost model
-reproduces the paper's measured speedup ratios).
+Hardware tables ship for TPU_V5E (the target), V100_16G/ETH35 (the paper's
+own cluster — used by benchmarks/fig2 & fig5 to check the cost model
+reproduces the paper's measured speedup ratios), and the P100/T4-class
+parts that appear in Whale's *heterogeneous* experiments (§5).
+
+Heterogeneous clusters (DESIGN.md §2–3): a :class:`ClusterSpec` holds one
+:class:`DeviceGroup` per hardware kind (e.g. 8×V100 + 8×T4).  The four-term
+cost is then evaluated *per group* — each group sees its own ``Hardware``
+table and its share of the work — and the step time is the **max** over
+groups (the slowest group dominates a synchronous step).  The balancing
+mechanisms that choose those shares live in :mod:`repro.core.hetero`.
 """
 from __future__ import annotations
 
@@ -77,6 +85,93 @@ V100_PAPER = Hardware(
     axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
     mxu_eff=0.45,
 )
+
+# P100-16G: the previous-generation part Whale's heterogeneous cluster mixes
+# with V100s (§5).  No tensor cores — fp16 peak ≈ 2× the 9.3 TFLOP/s fp32.
+P100_16G = Hardware(
+    name="p100_16g",
+    peak_flops=18.7e12,
+    hbm_bw=732e9,
+    hbm_bytes=16 * 2**30,
+    link_bw={"fast": 80e9, "slow": 35e9 / 8 / 2},   # NVLink1 vs shared Eth
+    axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
+    mxu_eff=0.40,
+)
+
+# T4-16G: the inference-class card that shows up in shared production pools —
+# 65 TFLOP/s fp16 tensor, PCIe only (no NVLink).
+T4_16G = Hardware(
+    name="t4_16g",
+    peak_flops=65e12,
+    hbm_bw=300e9,
+    hbm_bytes=16 * 2**30,
+    link_bw={"fast": 16e9, "slow": 35e9 / 8 / 2},   # PCIe3 x16 vs shared Eth
+    axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
+    mxu_eff=0.40,
+)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous cluster description (DESIGN.md §2)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGroup:
+    """A homogeneous pool of devices inside a (possibly mixed) cluster."""
+    name: str
+    hw: Hardware
+    n_devices: int
+
+    @property
+    def device_flops(self) -> float:
+        """Effective FLOP/s of ONE device (peak × achievable efficiency)."""
+        return self.hw.peak_flops * self.hw.mxu_eff
+
+    @property
+    def group_flops(self) -> float:
+        """Effective FLOP/s of the whole group."""
+        return self.device_flops * self.n_devices
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Per-device-group hardware tables for one physical cluster.
+
+    A homogeneous cluster is the single-group special case; every
+    heterogeneity-aware code path must reduce *exactly* to the homogeneous
+    behaviour when ``is_homogeneous`` (regression-guarded by
+    tests/test_heterogeneous.py).
+    """
+    groups: tuple
+
+    def __post_init__(self):
+        if not self.groups:
+            raise ValueError("ClusterSpec needs at least one DeviceGroup")
+
+    @classmethod
+    def homogeneous(cls, hw: Hardware, n_devices: int,
+                    name: str | None = None) -> "ClusterSpec":
+        return cls(groups=(DeviceGroup(name or hw.name, hw, n_devices),))
+
+    @property
+    def n_devices(self) -> int:
+        return sum(g.n_devices for g in self.groups)
+
+    @property
+    def is_homogeneous(self) -> bool:
+        return len({g.hw.name for g in self.groups}) == 1
+
+    @property
+    def total_flops(self) -> float:
+        return sum(g.group_flops for g in self.groups)
+
+    def slowest(self) -> DeviceGroup:
+        return min(self.groups, key=lambda g: g.device_flops)
+
+    def min_bw(self, axis: str) -> float:
+        """Bottleneck bandwidth for a collective spanning every group."""
+        return min(g.hw.bw_for_axis(axis) for g in self.groups)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,442 @@
+"""Hardware-aware balancing over heterogeneous device groups (Whale §5).
+
+The paper's headline mechanism: when a cluster mixes GPU generations
+(V100 pods next to P100/T4 pods), an even split of work makes every step
+wait for the slowest card.  Whale restores balance with two mechanisms,
+both implemented here against the meta-driven cost model (DESIGN.md §2):
+
+1. **Intra-stage batch balancing** (:func:`balance_batch`): replicas of
+   the same (sub)graph placed on different hardware receive micro-batch
+   shares proportional to their group's *effective* FLOP/s
+   (peak × achievable efficiency), subject to each group's HBM cap.  The
+   shares always sum to the global batch.
+2. **Inter-stage layer balancing** (:func:`balance_stages`): pipeline
+   stages hosted on unequal devices are sized so per-stage latency
+   equalizes — layers allocated ∝ stage FLOP/s, repaired against each
+   stage's memory budget.
+
+:func:`plan_placement` combines the two into a :class:`HeteroPlacement`
+and :func:`hetero_step_cost` evaluates the four-term step cost *per
+group* with the slowest group dominating (a synchronous step can go no
+faster than its stragglers).  Every function reduces **exactly** to the
+homogeneous behaviour on a single-group / uniform :class:`ClusterSpec` —
+tests/test_heterogeneous.py guards this byte-for-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core.cost_model import (ClusterSpec, CostBreakdown, DeviceGroup,
+                                   StrategySpec, WorkloadMeta,
+                                   all_reduce_time, step_cost)
+
+
+# ---------------------------------------------------------------------------
+# integer proportional allocation (largest-remainder)
+# ---------------------------------------------------------------------------
+
+
+def proportional_split(total: int, weights: Sequence[float], *,
+                       minimum: int = 0) -> list:
+    """Split ``total`` integer units ∝ ``weights`` (largest-remainder).
+
+    Guarantees ``sum(out) == total`` and ``out[i] >= minimum``; equal
+    weights with a divisible total produce an exactly even split (the
+    homogeneous-reduction requirement).
+    """
+    n = len(weights)
+    if total < minimum * n:
+        raise ValueError(f"cannot give {n} parts ≥{minimum} from {total}")
+    spare = total - minimum * n
+    wsum = sum(weights)
+    if wsum <= 0:
+        weights = [1.0] * n
+        wsum = float(n)
+    ideal = [spare * w / wsum for w in weights]
+    out = [int(math.floor(x)) for x in ideal]
+    rem = spare - sum(out)
+    # hand the leftover units to the largest fractional parts (stable order)
+    order = sorted(range(n), key=lambda i: (ideal[i] - out[i], -i),
+                   reverse=True)
+    for i in order[:rem]:
+        out[i] += 1
+    return [minimum + x for x in out]
+
+
+# ---------------------------------------------------------------------------
+# meta re-scaling: view the workload through one group's / stage's share
+# ---------------------------------------------------------------------------
+
+
+def scale_meta_batch(meta: WorkloadMeta, batch: int) -> WorkloadMeta:
+    """The workload as seen by a replica group that owns ``batch`` samples.
+
+    FLOPs, activations, and logits scale with the batch share; parameters
+    are fully replicated into every DP group, so they do not.
+    """
+    f = batch / meta.batch if meta.batch else 0.0
+    return dataclasses.replace(
+        meta, fwd_flops=meta.fwd_flops * f,
+        act_bytes_per_layer=meta.act_bytes_per_layer * f,
+        logits_bytes=meta.logits_bytes * f, batch=batch)
+
+
+def scale_meta_stage(meta: WorkloadMeta, layers: int, pp: int) -> WorkloadMeta:
+    """The workload as seen by ONE pipeline stage holding ``layers`` layers.
+
+    ``step_cost`` divides compute/params by ``pp`` internally, so the
+    per-stage view multiplies the stage's layer share back by ``pp``:
+    a stage holding L_s of L layers sees ``fwd_flops · (L_s/L) · pp`` so
+    that its share after the internal ``/pp`` is exactly ``L_s/L``.  With
+    the even split ``L_s = L/pp`` this is the identity — the homogeneous
+    reduction is byte-exact.
+    """
+    f = layers / meta.n_layers
+    return dataclasses.replace(
+        meta,
+        fwd_flops=meta.fwd_flops * f * pp,
+        param_bytes=meta.param_bytes * f * pp,
+        tp_shardable_param_bytes=meta.tp_shardable_param_bytes * f * pp,
+        n_layers=layers * pp)
+
+
+# ---------------------------------------------------------------------------
+# strategy ↔ cluster compatibility
+# ---------------------------------------------------------------------------
+
+
+def strategy_fits_cluster(strat: StrategySpec, spec: ClusterSpec) -> bool:
+    """Can ``strat`` be laid out on ``spec`` without splitting a shard
+    across a hardware boundary?
+
+    - ``pp == 1``: each group hosts whole replicas → ``tp·pp`` must divide
+      every group's device count.
+    - ``pp > 1``: each group hosts whole stages → ``dp·tp`` (one stage's
+      devices) must divide every group's device count.
+    """
+    if strat.devices != spec.n_devices:
+        return False
+    unit = strat.tp * strat.pp if strat.pp == 1 else strat.dp * strat.tp
+    return all(g.n_devices % unit == 0 for g in spec.groups)
+
+
+def stage_groups_for(spec: ClusterSpec, strat: StrategySpec) -> tuple:
+    """Map each of the ``pp`` stages to its hosting DeviceGroup.
+
+    Stages are dealt to groups in declaration order, each group hosting
+    ``n_g / (dp·tp)`` consecutive stages (whole stages never straddle a
+    hardware boundary).
+    """
+    per_stage = strat.dp * strat.tp
+    out = []
+    for g in spec.groups:
+        out.extend([g] * (g.n_devices // per_stage))
+    if len(out) != strat.pp:
+        raise ValueError(
+            f"{spec.n_devices} devices in groups {[g.name for g in spec.groups]}"
+            f" do not tile {strat.pp} stages of {per_stage} devices")
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# mechanism 1: intra-stage throughput-proportional batch balancing
+# ---------------------------------------------------------------------------
+
+
+def _max_feasible_batch(meta: WorkloadMeta, strat: StrategySpec,
+                        group: DeviceGroup) -> int:
+    """Largest batch share whose peak memory fits the group's HBM
+    (memory is monotone in batch via the activation/logits terms)."""
+    def fits(b: int) -> bool:
+        return step_cost(scale_meta_batch(meta, b), strat, group.hw).feasible
+
+    if fits(meta.batch):
+        return meta.batch
+    if not fits(0):
+        return -1           # params alone overflow — group unusable
+    lo, hi = 0, meta.batch   # invariant: fits(lo), not fits(hi)
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid
+    return lo
+
+
+def balance_batch(meta: WorkloadMeta, strat: StrategySpec,
+                  spec: ClusterSpec) -> tuple:
+    """Per-group batch shares ∝ effective group FLOP/s, HBM-capped.
+
+    Returns one integer share per group, summing to ``meta.batch``; a
+    uniform cluster gets an exactly even split.  Raises ``ValueError``
+    when no assignment fits (the caller prunes such strategies).
+    """
+    per_replica = strat.tp * strat.pp
+    dp_g = [g.n_devices // per_replica for g in spec.groups]
+    strat_g = [dataclasses.replace(strat, dp=max(d, 1)) for d in dp_g]
+    caps = [_max_feasible_batch(meta, s, g)
+            for s, g in zip(strat_g, spec.groups)]
+    if any(c < 0 for c in caps):
+        bad = [g.name for g, c in zip(spec.groups, caps) if c < 0]
+        raise ValueError(f"groups {bad} cannot hold the model at all")
+
+    weights = [d * g.device_flops for d, g in zip(dp_g, spec.groups)]
+    n = len(spec.groups)
+    shares = [0] * n
+    free = list(range(n))
+    remaining = meta.batch
+    # clamp-and-redistribute: overweight groups pin at their HBM cap, the
+    # excess re-splits proportionally among the rest
+    while True:
+        split = proportional_split(remaining, [weights[i] for i in free])
+        over = [i for i, s in zip(free, split) if s > caps[i]]
+        for i, s in zip(free, split):
+            shares[i] = s
+        if not over:
+            break
+        for i in over:
+            shares[i] = caps[i]
+            remaining -= caps[i]
+            free.remove(i)
+        if not free:
+            if remaining > 0:
+                raise ValueError(
+                    f"global batch {meta.batch} exceeds the cluster's "
+                    f"combined HBM capacity under {strat.describe()}")
+            break
+    assert sum(shares) == meta.batch
+    return tuple(shares)
+
+
+# ---------------------------------------------------------------------------
+# mechanism 2: inter-stage latency-equalizing layer balancing
+# ---------------------------------------------------------------------------
+
+
+def balance_stages(meta: WorkloadMeta, strat: StrategySpec,
+                   spec: ClusterSpec) -> tuple:
+    """(stage→group mapping, per-stage layer counts).
+
+    Per-stage latency is ``layers_s / flops_s``; equalizing it means
+    ``layers_s ∝ flops_s`` of the hosting group.  The integer allocation
+    (≥1 layer per stage, summing to ``n_layers``) is then repaired
+    against each stage's HBM: overweight stages shed layers one at a time
+    to the feasible stage with the most compute headroom.
+    """
+    sgroups = stage_groups_for(spec, strat)
+    weights = [g.device_flops for g in sgroups]
+    layers = proportional_split(meta.n_layers, weights, minimum=1)
+
+    def cost_with(i: int, n: int) -> CostBreakdown:
+        return step_cost(scale_meta_stage(meta, n, strat.pp),
+                         strat, sgroups[i].hw)
+
+    # memory repair: migrate layers off stages whose slice overflows HBM.
+    # Takers are checked at their post-transfer layer count, so a move
+    # never creates a new overflow (no donor/taker ping-pong).
+    for _ in range(meta.n_layers):
+        costs = [cost_with(i, layers[i]) for i in range(strat.pp)]
+        over = [i for i, c in enumerate(costs) if not c.feasible]
+        if not over:
+            break
+        donors = [i for i in over if layers[i] > 1]
+        takers = [i for i, c in enumerate(costs)
+                  if c.feasible and cost_with(i, layers[i] + 1).feasible]
+        if not donors or not takers:
+            raise ValueError(
+                f"no layer allocation over {strat.pp} stages fits HBM")
+        src = max(donors, key=lambda i: costs[i].mem_bytes
+                  - sgroups[i].hw.hbm_bytes)
+        dst = max(takers, key=lambda i: sgroups[i].hw.hbm_bytes
+                  - costs[i].mem_bytes)
+        layers[src] -= 1
+        layers[dst] += 1
+    if any(not cost_with(i, layers[i]).feasible for i in range(strat.pp)):
+        raise ValueError(
+            f"no layer allocation over {strat.pp} stages fits HBM")
+    return sgroups, tuple(layers)
+
+
+# ---------------------------------------------------------------------------
+# combined placement + per-group cost (slowest group dominates)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class UnitPlan:
+    """One balanced unit of the placement: a replica group (``pp == 1``)
+    or a pipeline stage (``pp > 1``)."""
+    kind: str                  # "group" | "stage"
+    group: DeviceGroup
+    strategy: StrategySpec     # per-unit view (dp narrowed for groups)
+    meta: WorkloadMeta         # workload re-scaled to this unit's share
+    batch: int                 # batch share owned by this unit
+    layers: int                # layers held (n_layers/pp when kind=group)
+    cost: CostBreakdown
+
+
+@dataclasses.dataclass(frozen=True)
+class HeteroPlacement:
+    """A hardware-aware assignment of work to a heterogeneous cluster."""
+    spec: ClusterSpec
+    strategy: StrategySpec
+    units: tuple               # one UnitPlan per group (pp==1) / stage (pp>1)
+    batch_shares: tuple        # per group, sums to the global batch
+    layer_alloc: tuple         # per stage, sums to n_layers
+    cost: CostBreakdown        # combined: max over units + cross-group comm
+
+    @property
+    def step_time(self) -> float:
+        return self.cost.total
+
+    def batch_slices(self) -> tuple:
+        """Per-group ``(start, stop)`` offsets into the global batch —
+        what a data loader uses to feed each hardware pool its share."""
+        out, off = [], 0
+        for b in self.batch_shares:
+            out.append((off, off + b))
+            off += b
+        return tuple(out)
+
+    def describe(self) -> str:
+        bits = [f"{self.strategy.describe()} on "
+                + "+".join(f"{g.n_devices}×{g.hw.name}"
+                           for g in self.spec.groups)]
+        if len(self.batch_shares) > 1:
+            bits.append("batch=" + "/".join(str(b) for b in self.batch_shares))
+        if self.strategy.pp > 1:
+            bits.append("layers=" + "/".join(str(x) for x in self.layer_alloc))
+        return " ".join(bits)
+
+
+def _combine(units: Sequence[UnitPlan], extra_comm: float,
+             detail: dict) -> CostBreakdown:
+    """Max-reduce unit costs: the step is as slow as its slowest unit."""
+    feasible = all(u.cost.feasible for u in units)
+    worst = max(units, key=lambda u: (u.cost.total
+                                      if u.cost.feasible else math.inf))
+    detail = dict(detail)
+    detail["units"] = {f"{u.kind}:{u.group.name}[{i}]": u.cost.detail
+                      for i, u in enumerate(units)}
+    return CostBreakdown(
+        compute=worst.cost.compute,
+        comm=worst.cost.comm + extra_comm,
+        bubble=worst.cost.bubble,
+        mem_bytes=max(u.cost.mem_bytes for u in units),
+        feasible=feasible, detail=detail)
+
+
+def plan_placement(meta: WorkloadMeta, strat: StrategySpec,
+                   spec: ClusterSpec, *, overlap: float = 0.0,
+                   balanced: bool = True) -> HeteroPlacement:
+    """Balance ``meta`` under ``strat`` across ``spec`` and price it.
+
+    ``balanced=False`` computes the *naive* placement (even batch shares /
+    even layer split regardless of hardware) — the baseline that
+    benchmarks/fig7_heterogeneous.py compares against.
+
+    On a homogeneous spec the balanced and naive placements coincide and
+    the combined cost equals ``step_cost`` on the single hardware table.
+    """
+    if not strategy_fits_cluster(strat, spec):
+        raise ValueError(f"{strat.describe()} does not tile "
+                         f"{[g.n_devices for g in spec.groups]} devices")
+    detail: dict = {"placement": "balanced" if balanced else "naive"}
+    units = []
+    if strat.pp == 1:
+        per_replica = strat.tp
+        dp_g = [g.n_devices // per_replica for g in spec.groups]
+
+        def price(shares):
+            us = []
+            for g, d, b in zip(spec.groups, dp_g, shares):
+                s_g = dataclasses.replace(strat, dp=max(d, 1))
+                m_g = scale_meta_batch(meta, b)
+                us.append(UnitPlan(
+                    kind="group", group=g, strategy=s_g, meta=m_g, batch=b,
+                    layers=meta.n_layers,
+                    cost=step_cost(m_g, s_g, g.hw, overlap=overlap)))
+            ex = 0.0
+            if len(spec.groups) > 1:
+                # hierarchical DP reduction: in-group ring (already in each
+                # unit's cost) + one cross-group ring on the bottleneck link
+                grad = meta.param_bytes * meta.grad_factor / strat.tp
+                ex = all_reduce_time(grad, len(spec.groups),
+                                     spec.min_bw("data")) * (1.0 - overlap)
+            return us, ex
+
+        even = tuple(proportional_split(meta.batch, dp_g))
+        shares = even
+        if balanced:
+            try:
+                shares = balance_batch(meta, strat, spec)
+            except ValueError:
+                # no HBM-feasible assignment exists — price the even split
+                # so callers see an infeasible CostBreakdown (mirroring
+                # step_cost's semantics) instead of an exception
+                shares = even
+        units, extra = price(shares)
+        if balanced and shares != even:
+            # the even split is one point of the feasible share space — the
+            # proportional heuristic (HBM-clamped, integerized) must never
+            # return something worse than it
+            u2, e2 = price(even)
+            c1 = _combine(units, extra, detail)
+            c2 = _combine(u2, e2, detail)
+            if c2.feasible and (not c1.feasible or c2.total < c1.total):
+                shares, units, extra = even, u2, e2
+        if extra:
+            detail["cross_group_allreduce"] = extra
+        batch_shares = shares
+        layer_alloc = tuple([meta.n_layers])
+    else:
+        sgroups = stage_groups_for(spec, strat)
+
+        def price_stages(layer_counts):
+            return [UnitPlan(
+                kind="stage", group=g, strategy=strat,
+                meta=scale_meta_stage(meta, ls, strat.pp),
+                batch=meta.batch, layers=ls,
+                cost=step_cost(scale_meta_stage(meta, ls, strat.pp), strat,
+                               g.hw, overlap=overlap))
+                for g, ls in zip(sgroups, layer_counts)]
+
+        even = tuple(proportional_split(
+            meta.n_layers, [1.0] * strat.pp, minimum=1))
+        layers = even
+        if balanced:
+            try:
+                sgroups, layers = balance_stages(meta, strat, spec)
+            except ValueError:
+                layers = even        # priced infeasible below, not raised
+        units = price_stages(layers)
+        if balanced and tuple(layers) != even:
+            # same guard as the batch split: proportional-with-repair must
+            # never lose to the even allocation it generalizes
+            u2 = price_stages(even)
+            c1 = _combine(units, 0.0, detail)
+            c2 = _combine(u2, 0.0, detail)
+            if c2.feasible and (not c1.feasible or c2.total < c1.total):
+                layers, units = even, u2
+        extra = 0.0
+        batch_shares = tuple([meta.batch])
+        layer_alloc = tuple(layers)
+    cost = _combine(units, extra, detail)
+    return HeteroPlacement(spec=spec, strategy=strat, units=tuple(units),
+                           batch_shares=batch_shares,
+                           layer_alloc=layer_alloc, cost=cost)
+
+
+def hetero_step_cost(meta: WorkloadMeta, strat: StrategySpec,
+                     spec: ClusterSpec, *, overlap: float = 0.0,
+                     balanced: bool = True) -> CostBreakdown:
+    """Four-term step cost on a heterogeneous cluster (slowest group wins).
+
+    Single-group specs return **exactly** ``step_cost(meta, strat, hw)``
+    up to the extra placement detail (regression-guarded).
+    """
+    return plan_placement(meta, strat, spec, overlap=overlap,
+                          balanced=balanced).cost

@@ -1,0 +1,62 @@
+"""Version-tolerant shims over jax APIs that moved between 0.4.x and 0.5+.
+
+The repo targets current jax (``jax.shard_map``, abstract-mesh manual-axis
+tracking) but must degrade gracefully on the 0.4.x line some containers
+ship.  Only the two APIs the core actually uses are shimmed:
+
+- :func:`shard_map` — ``jax.shard_map(..., axis_names=, check_vma=)`` on
+  new jax; falls back to ``jax.experimental.shard_map.shard_map`` with the
+  equivalent ``auto=`` / ``check_rep=`` spelling (``axis_names`` lists the
+  *manual* axes, legacy ``auto`` lists the complement).
+- :func:`manual_axis_names` — the set of mesh axes that are manual in the
+  current tracing context (inside a ``shard_map`` body).  New jax exposes
+  this via the abstract mesh; 0.4.x binds manual axes into the axis env.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def manual_axis_names() -> frozenset:
+    """Mesh axes currently bound manual (inside shard_map); else empty."""
+    gam = getattr(jax.sharding, "get_abstract_mesh", None)
+    if gam is not None:
+        am = gam()
+        if am is None or getattr(am, "empty", True):
+            return frozenset()
+        axis_type = getattr(jax.sharding, "AxisType", None)
+        if axis_type is None:
+            return frozenset()
+        return frozenset(a for a, t in getattr(am, "_name_to_type", {}).items()
+                         if t == axis_type.Manual)
+    from jax._src import core
+    try:
+        return frozenset(core.get_axis_env().axis_sizes)
+    except Exception:
+        return frozenset()
+
+
+def axis_size(axis) -> jax.Array:
+    """``jax.lax.axis_size`` (new jax) or the psum-of-ones equivalent
+    (0.4.x, where the collective folds to a constant at trace time)."""
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis)
+    import jax.numpy as jnp
+    return jax.lax.psum(jnp.ones((), jnp.int32), axis)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` on new jax; legacy experimental spelling on 0.4.x."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = frozenset(axis_names)
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+    kw = {"check_rep": bool(check_vma)}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return legacy(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

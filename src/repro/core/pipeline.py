@@ -1,6 +1,6 @@
 """GPipe pipeline parallelism over a ``stage`` mesh axis (paper Cases 3–4).
 
-TPU adaptation (DESIGN.md §2): Whale pipelines TF graph partitions with
+TPU adaptation (DESIGN.md §5): Whale pipelines TF graph partitions with
 host-side queues; on TPU the native mechanism is a collective pipeline —
 stage parameters are sharded over a ``stage`` mesh axis inside a
 ``shard_map`` (manual over ``stage``, GSPMD-auto over ``data``/``model`` so
@@ -135,8 +135,9 @@ def make_gpipe_loss(model: Model, mesh: Mesh, rules: ShardingRules, *,
     sm_specs = stage_only_specs(model.axes())
 
     def loss_fn(params, tokens):
+        from repro.core.jax_compat import shard_map
         with use_rules(rules):
-            return jax.shard_map(
+            return shard_map(
                 inner, mesh=mesh, in_specs=(sm_specs, P()), out_specs=P(),
                 axis_names=frozenset({"stage"}), check_vma=False,
             )(params, tokens)

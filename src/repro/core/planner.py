@@ -23,6 +23,15 @@ wrapped in a ``shard_map`` that is *manual* over the ``pod`` axis and auto
 (GSPMD) over the rest — the cross-pod gradient reduction becomes an explicit
 int8 quantize → psum → dequantize with error feedback
 (:mod:`repro.optim.grad_compress`), cutting DCN bytes 4×.
+
+Heterogeneous clusters (DESIGN.md §2): the physical mesh stays rectangular —
+heterogeneity lives in the *placement*, not the mesh shape.  When
+``compile_plan`` is given a mixed-hardware ``ClusterSpec`` (plus the
+workload's ``WorkloadMeta``), the resulting :class:`ExecutionPlan` carries a
+:class:`~repro.core.hetero.HeteroPlacement`: throughput-proportional batch
+shares per device group (``placement.batch_slices()`` feeds the data
+loader) and latency-equalized per-stage layer counts.  A homogeneous spec
+produces a plan byte-identical to the spec-less path (regression-guarded).
 """
 from __future__ import annotations
 
@@ -44,12 +53,25 @@ from repro.core.vdevice import Cluster
 # ---------------------------------------------------------------------------
 
 def mesh_for_strategy(strat: StrategySpec, *, devices=None,
-                      pods: int = 1) -> Mesh:
+                      pods: int = 1, cluster_spec=None) -> Mesh:
     """Build a mesh whose axes realise the strategy.
 
     Axis order (major→minor): pod, stage, data, model — so TP rides the
     ICI-contiguous minor axis and only DP crosses pods.
+
+    ``cluster_spec`` (a :class:`~repro.core.cost_model.ClusterSpec`) is
+    validated against the strategy: shards must tile each hardware group
+    without straddling a group boundary (DESIGN.md §2).  The mesh shape
+    itself is unaffected — for a homogeneous spec the returned mesh is
+    identical to the spec-less call; uneven *work* splits ride the
+    placement (see :func:`compile_plan`), never the mesh.
     """
+    if cluster_spec is not None:
+        from repro.core.hetero import strategy_fits_cluster
+        if not strategy_fits_cluster(strat, cluster_spec):
+            raise ValueError(
+                f"{strat.describe()} does not tile the device groups "
+                f"{[(g.name, g.n_devices) for g in cluster_spec.groups]}")
     shape, names = [], []
     if pods > 1:
         shape.append(pods)
@@ -113,11 +135,18 @@ def _is_axes(t) -> bool:
 
 @dataclasses.dataclass
 class ExecutionPlan:
-    """Everything needed to build jitted steps for one (model, mesh, strategy)."""
+    """Everything needed to build jitted steps for one (model, mesh, strategy).
+
+    ``placement`` is populated only for mixed-hardware clusters: a
+    :class:`~repro.core.hetero.HeteroPlacement` holding per-group batch
+    shares and per-stage layer counts (None on homogeneous clusters, so
+    the plan is byte-identical to the pre-heterogeneous planner).
+    """
     model: Any                      # repro.models.lm.Model
     mesh: Mesh
     rules: ShardingRules
     strategy: StrategySpec
+    placement: Any = None           # hetero.HeteroPlacement | None
 
     def __post_init__(self):
         self.param_axes = self.model.axes()
@@ -254,7 +283,8 @@ class ExecutionPlan:
         rep = NamedSharding(mesh, P())
         if compress_pod and "pod" in mesh.shape:
             # manual over 'pod' only: GSPMD still partitions data/model inside
-            inner = jax.shard_map(
+            from repro.core.jax_compat import shard_map
+            inner = shard_map(
                 fn, mesh=mesh,
                 in_specs=(P(), P(), P("pod"), P(), P()),
                 out_specs=(P(), P(), P(), P()),
@@ -314,8 +344,19 @@ class ExecutionPlan:
 # ---------------------------------------------------------------------------
 
 def compile_plan(model, mesh: Mesh, strategy: StrategySpec | None = None,
-                 rules: ShardingRules | None = None) -> ExecutionPlan:
-    """The Whale Engine entry: model + mesh + strategy → ExecutionPlan."""
+                 rules: ShardingRules | None = None, *,
+                 cluster_spec=None, workload_meta=None, placement=None,
+                 overlap: float = 0.0) -> ExecutionPlan:
+    """The Whale Engine entry: model + mesh + strategy → ExecutionPlan.
+
+    ``cluster_spec`` + ``workload_meta``: on a mixed-hardware cluster the
+    plan additionally carries the balanced :class:`HeteroPlacement`
+    (DESIGN.md §2) — per-group batch shares / per-stage layer counts,
+    priced at ``overlap``.  A caller that already holds a placement (e.g.
+    from the auto-search) passes it via ``placement`` and no re-balancing
+    happens.  A homogeneous (or absent) spec leaves ``plan.placement`` as
+    None and the plan is identical to the pre-heterogeneous planner.
+    """
     if strategy is None:
         dp = 1
         for a in ("pod", "data"):
@@ -325,11 +366,25 @@ def compile_plan(model, mesh: Mesh, strategy: StrategySpec | None = None,
                                 pp=mesh.shape.get("stage", 1))
     if rules is None:
         rules = rules_for_strategy(mesh, strategy)
+    if (placement is None and cluster_spec is not None
+            and not cluster_spec.is_homogeneous and workload_meta is not None):
+        from repro.core.hetero import plan_placement
+        placement = plan_placement(workload_meta, strategy, cluster_spec,
+                                   overlap=overlap)
     return ExecutionPlan(model=model, mesh=mesh, rules=rules,
-                         strategy=strategy)
+                         strategy=strategy, placement=placement)
 
 
-def compile_plan_from_cluster(cluster: Cluster, model) -> ExecutionPlan:
-    """Cases-1..5 path: strategy inferred from the recorded TaskGraph."""
+def compile_plan_from_cluster(cluster: Cluster, model,
+                              workload_meta=None) -> ExecutionPlan:
+    """Cases-1..5 path: strategy inferred from the recorded TaskGraph.
+
+    On a mixed-hardware cluster, pass the workload's ``WorkloadMeta``
+    (e.g. from :func:`repro.core.auto.meta_from_taskgraph`) to get a
+    balanced placement on the plan; without it — or with a homogeneous
+    ``cluster.spec`` — ``plan.placement`` stays None.
+    """
     strat = strategy_from_taskgraph(cluster)
-    return compile_plan(model, cluster.mesh, strategy=strat)
+    return compile_plan(model, cluster.mesh, strategy=strat,
+                        cluster_spec=getattr(cluster, "spec", None),
+                        workload_meta=workload_meta)

@@ -149,15 +149,13 @@ def constrain(x: jax.Array, names: Sequence[str | None]) -> jax.Array:
     if rules is None:
         return x
     spec = rules.spec_for(names, x.shape)
-    am = jax.sharding.get_abstract_mesh()
-    if am is not None and not am.empty:
-        manual = {a for a, t in getattr(am, "_name_to_type", {}).items()
-                  if t == jax.sharding.AxisType.Manual}
-        if manual:
-            parts = tuple(None if (p in manual or (isinstance(p, tuple) and
-                                                   set(p) & manual)) else p
-                          for p in spec)
-            return jax.lax.with_sharding_constraint(x, P(*parts))
+    from repro.core.jax_compat import manual_axis_names
+    manual = manual_axis_names()
+    if manual:
+        parts = tuple(None if (p in manual or (isinstance(p, tuple) and
+                                               set(p) & manual)) else p
+                      for p in spec)
+        return jax.lax.with_sharding_constraint(x, P(*parts))
     return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
 
 

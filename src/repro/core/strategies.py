@@ -7,7 +7,7 @@ tensors flowing through ``wh.sub``-wrapped subgraph calls.  `stage` /
 `pipeline` scopes record stage boundaries; the executable pipeline schedule
 is built by :mod:`repro.core.pipeline` from the recorded TaskGraph (JAX has
 no TF-style graph editing, so pipelining is a *construction*, not a rewrite —
-see DESIGN.md §2).
+see DESIGN.md §5).
 
     with wh.cluster(mesh_shape=(2, 4), axis_names=("data", "model")):
         with wh.replica():                      # Case 1: data parallel

@@ -219,6 +219,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # jax<=0.4 returns [dict] per device
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = collective_bytes(hlo, n_dev)
     hbm_dev = hbm_traffic_bytes(hlo)

@@ -1,4 +1,5 @@
-"""Elastic re-meshing: restart the job at a different device count.
+"""Elastic re-meshing: restart the job at a different device count *or a
+different hardware mix*.
 
 Checkpoints are mesh-agnostic (full logical arrays + logical axis names), so
 scaling in/out is: build the new mesh → rebuild the plan (ShardingRules give
@@ -7,9 +8,15 @@ no longer divide) → ``CheckpointManager.restore`` with the new shardings.
 The batch schedule is kept consistent by preserving *global* batch size —
 dp changes only the per-device slice.
 
-This is the homogeneous-pod replacement for Whale-ATC'22's heterogeneous
-load balancing (DESIGN.md §2): a flagged straggler host is excluded and the
-job resumes on the surviving N−k hosts.
+Two re-mesh flavours (DESIGN.md §2):
+
+- :meth:`ElasticContext.remesh` — same hardware, different count (straggler
+  eviction: a flagged host is excluded and the job resumes on N−k hosts).
+- :meth:`ElasticContext.rebalance` — a *different hardware mix*: given the
+  surviving cluster's per-device-group :class:`ClusterSpec` (e.g. the V100
+  pod shrank and a T4 pool joined), the heterogeneity-aware search picks a
+  fresh strategy, the balancer re-splits batch/layers in proportion to each
+  group's effective FLOP/s, and the checkpoint restores into the new plan.
 """
 from __future__ import annotations
 
@@ -20,7 +27,7 @@ import jax
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core.planner import ExecutionPlan, compile_plan
-from repro.core.cost_model import StrategySpec
+from repro.core.cost_model import ClusterSpec, StrategySpec, WorkloadMeta
 
 
 def _ns(mesh, specs):
@@ -36,12 +43,22 @@ class ElasticContext:
     optimizer: Any
 
     def remesh(self, ckpt: CheckpointManager, new_mesh,
-               strategy: StrategySpec | None = None):
+               strategy: StrategySpec | None = None, *,
+               cluster_spec: ClusterSpec | None = None,
+               workload_meta: WorkloadMeta | None = None,
+               placement=None, overlap: float = 0.0):
         """→ (step, plan, params, opt_state, extra) on ``new_mesh``.
 
-        Raises FileNotFoundError when no committed checkpoint exists.
+        ``cluster_spec`` + ``workload_meta`` make the rebuilt plan carry a
+        balanced heterogeneous placement (per-group batch shares) when the
+        new hardware is mixed; a pre-computed ``placement`` (from the
+        search) is attached as-is.  Raises FileNotFoundError when no
+        committed checkpoint exists.
         """
-        plan = compile_plan(self.model, new_mesh, strategy=strategy)
+        plan = compile_plan(self.model, new_mesh, strategy=strategy,
+                            cluster_spec=cluster_spec,
+                            workload_meta=workload_meta,
+                            placement=placement, overlap=overlap)
         p_shapes = plan.param_shapes
         o_shapes = jax.eval_shape(self.optimizer.init, p_shapes)
         target = {"params": p_shapes, "opt": o_shapes}
@@ -55,6 +72,54 @@ class ElasticContext:
                 f"no committed checkpoint in {ckpt.directory}")
         step, tree, extra = out
         return step, plan, tree["params"], tree["opt"], extra
+
+    def rebalance(self, ckpt: CheckpointManager,
+                  cluster_spec: ClusterSpec,
+                  workload_meta: WorkloadMeta, *, new_mesh=None,
+                  overlap: float = 0.5):
+        """Re-mesh onto a **different hardware mix**.
+
+        Runs the heterogeneity-aware strategy search over ``cluster_spec``
+        (slowest-group-dominates cost, per-group HBM pruning), then
+        restores the checkpoint into the winning plan — which carries the
+        exact placement the search scored (not a re-balance at different
+        assumptions).  The plan's ``placement.batch_slices()`` tells the
+        data loader each group's new throughput-proportional share of the
+        (unchanged) global batch.
+
+        The winning strategy is only known after the search, so the mesh
+        is normally built here (``new_mesh=None``).  A caller-supplied
+        mesh is validated against the winner — a mesh realising a
+        different (dp, tp, pp) would silently train a different
+        parallelism than the placement describes.
+        """
+        from repro.core.auto import search
+        from repro.core.planner import mesh_for_strategy
+        cands = search(workload_meta, cluster_spec, top_k=1, overlap=overlap)
+        if not cands:
+            raise RuntimeError(
+                f"no feasible strategy for {workload_meta.name} on "
+                + "+".join(f"{g.n_devices}×{g.hw.name}"
+                           for g in cluster_spec.groups))
+        strat = cands[0].strategy
+        if new_mesh is None:
+            new_mesh = mesh_for_strategy(strat, cluster_spec=cluster_spec)
+        else:
+            dp = 1
+            for a in ("pod", "data"):
+                if a in new_mesh.shape:
+                    dp *= new_mesh.shape[a]
+            realized = (dp, new_mesh.shape.get("model", 1),
+                        new_mesh.shape.get("stage", 1))
+            if realized != (strat.dp, strat.tp, strat.pp):
+                raise ValueError(
+                    f"new_mesh realises dp×tp×pp={realized} but the "
+                    f"search picked {strat.describe()} — build the mesh "
+                    f"with mesh_for_strategy(strategy) or omit new_mesh")
+        return self.remesh(ckpt, new_mesh, strategy=strat,
+                           cluster_spec=cluster_spec,
+                           workload_meta=workload_meta,
+                           placement=cands[0].placement, overlap=overlap)
 
 
 def shrink_devices(devices, exclude_hosts: set):

@@ -6,9 +6,19 @@ import subprocess
 import sys
 import textwrap
 
+import jax
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Partially-manual shard_map (manual over one axis, GSPMD-auto over the
+# rest — the pipeline and compressed-DP paths) only lowers on current jax;
+# the 0.4.x line's XLA aborts on PartitionId / IsManualSubgroup.  See
+# repro/core/jax_compat.py for the API shims that cover everything else.
+requires_partial_auto_shard_map = pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-auto shard_map does not lower on jax<=0.4 "
+           "(XLA PartitionId/IsManualSubgroup)")
 
 
 def run_py(code: str, devices: int = 8, timeout: int = 540):
@@ -45,6 +55,7 @@ def test_dp_matches_single_device_loss():
     """)
 
 
+@requires_partial_auto_shard_map
 def test_gpipe_loss_matches_reference():
     """Pipeline (2 stages × dp × tp) loss == non-pipelined loss."""
     run_py("""
@@ -74,6 +85,7 @@ def test_gpipe_loss_matches_reference():
     """)
 
 
+@requires_partial_auto_shard_map
 def test_gpipe_training_reduces_loss():
     run_py("""
         import jax, jax.numpy as jnp, numpy as np
@@ -107,6 +119,7 @@ def test_gpipe_training_reduces_loss():
     """)
 
 
+@requires_partial_auto_shard_map
 def test_compress_pod_training_step():
     """Cross-pod int8 error-feedback gradient reduction end-to-end."""
     run_py("""

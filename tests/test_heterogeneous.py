@@ -1,0 +1,276 @@
+"""Heterogeneity-aware planning (Whale §5, DESIGN.md §2).
+
+Three properties the balancer must uphold:
+  (a) throughput-proportional batch shares always sum to the global batch;
+  (b) a returned placement never exceeds any group's HBM;
+  (c) a homogeneous cluster reduces *exactly* to the pre-heterogeneous
+      plan — same costs, same meshes, same search ranking (the regression
+      guard for every pre-existing call site).
+"""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.auto import search
+from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
+                                   StrategySpec, T4_16G, TPU_V5E, V100_PAPER,
+                                   lm_workload_meta, step_cost)
+from repro.core.hetero import (balance_batch, balance_stages,
+                               hetero_step_cost, plan_placement,
+                               proportional_split, scale_meta_stage,
+                               strategy_fits_cluster)
+from repro.core.planner import mesh_for_strategy
+
+
+def _meta(batch=256, seq=512, arch="tinyllama-1.1b"):
+    from repro.configs import get_config
+    return lm_workload_meta(get_config(arch), batch=batch, seq=seq)
+
+
+MIXES = [
+    ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 8),
+                        DeviceGroup("t4", T4_16G, 8))),
+    ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 12),
+                        DeviceGroup("p100", P100_16G, 4))),
+    ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 8),
+                        DeviceGroup("t4", T4_16G, 4),
+                        DeviceGroup("p100", P100_16G, 4))),
+    ClusterSpec(groups=(DeviceGroup("tpu", TPU_V5E, 8),
+                        DeviceGroup("t4", T4_16G, 8))),
+]
+
+
+# ---------------------------------------------------------------------------
+# proportional_split: the integer allocator under both mechanisms
+# ---------------------------------------------------------------------------
+
+def test_proportional_split_sums_and_minimum():
+    for total, weights, minimum in [
+            (256, [1.0, 1.0], 0), (256, [3.0, 1.0], 0),
+            (22, [56.0, 26.0, 7.5], 1), (7, [1e-9, 1.0], 0),
+            (100, [0.0, 0.0], 0), (4, [5.0, 1.0, 1.0, 1.0], 1)]:
+        out = proportional_split(total, weights, minimum=minimum)
+        assert sum(out) == total
+        assert all(x >= minimum for x in out)
+
+
+def test_proportional_split_even_on_equal_weights():
+    """The homogeneous-reduction prerequisite: equal weights + divisible
+    total → exactly even."""
+    for n in (2, 4, 8):
+        assert proportional_split(256, [1.0] * n) == [256 // n] * n
+
+
+@settings(max_examples=60, deadline=None)
+@given(total=st.integers(1, 4096),
+       weights=st.lists(st.floats(0.01, 100.0), min_size=1, max_size=6))
+def test_proportional_split_property(total, weights):
+    out = proportional_split(total, weights)
+    assert sum(out) == total and all(x >= 0 for x in out)
+
+
+# ---------------------------------------------------------------------------
+# (a) batch shares sum to the global batch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", MIXES)
+@pytest.mark.parametrize("batch", [64, 256, 263])
+def test_batch_split_sums_to_global_batch(spec, batch):
+    meta = _meta(batch=batch)
+    strat = StrategySpec(dp=spec.n_devices, zero=3)
+    shares = balance_batch(meta, strat, spec)
+    assert len(shares) == len(spec.groups)
+    assert sum(shares) == batch
+    assert all(s >= 0 for s in shares)
+
+
+def test_batch_split_favours_faster_group():
+    spec = MIXES[0]                       # 8×V100 vs 8×T4
+    meta = _meta(batch=256)
+    shares = balance_batch(meta, StrategySpec(dp=16, zero=3), spec)
+    assert shares[0] > shares[1], \
+        "V100 group (faster) must receive the larger share"
+
+
+# ---------------------------------------------------------------------------
+# (b) placements never exceed any group's HBM
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec", MIXES)
+def test_placement_respects_hbm(spec):
+    meta = _meta(batch=256)
+    for strat in (StrategySpec(dp=spec.n_devices, zero=3),
+                  StrategySpec(dp=spec.n_devices // 4, tp=4, zero=1),
+                  StrategySpec(dp=spec.n_devices // 2, pp=2,
+                               micro_batches=8, zero=1)):
+        if not strategy_fits_cluster(strat, spec):
+            continue
+        try:
+            pl = plan_placement(meta, strat, spec, overlap=0.5)
+        except ValueError:
+            continue                       # no feasible balance: also legal
+        if not pl.cost.feasible:
+            continue
+        for u in pl.units:
+            assert u.cost.mem_bytes <= u.group.hw.hbm_bytes, \
+                f"{u.kind} on {u.group.name} overflows HBM"
+
+
+def test_stage_allocation_sums_and_respects_hbm():
+    spec = MIXES[0]
+    meta = _meta(batch=64)
+    strat = StrategySpec(dp=4, tp=1, pp=4, micro_batches=8, zero=1)
+    sgroups, layers = balance_stages(meta, strat, spec)
+    assert sum(layers) == meta.n_layers
+    assert all(l >= 1 for l in layers)
+    for g, ls in zip(sgroups, layers):
+        c = step_cost(scale_meta_stage(meta, ls, strat.pp), strat, g.hw)
+        assert c.mem_bytes <= g.hw.hbm_bytes
+
+
+def test_stage_allocation_gives_fast_stages_more_layers():
+    spec = MIXES[1]                       # 12×V100 + 4×P100 (P100 ~4× slower)
+    meta = _meta(batch=64)
+    strat = StrategySpec(dp=4, tp=1, pp=4, micro_batches=8, zero=1)
+    sgroups, layers = balance_stages(meta, strat, spec)
+    v100 = [l for g, l in zip(sgroups, layers) if g.hw is V100_PAPER]
+    p100 = [l for g, l in zip(sgroups, layers) if g.hw is P100_16G]
+    assert min(v100) > max(p100)
+
+
+def test_infeasible_batch_raises():
+    """A global batch no HBM-capped assignment can hold must raise."""
+    tiny = ClusterSpec(groups=(DeviceGroup("a", V100_PAPER, 1),
+                               DeviceGroup("b", T4_16G, 1)))
+    meta = _meta(batch=65536, seq=4096)
+    with pytest.raises(ValueError):
+        balance_batch(meta, StrategySpec(dp=2, zero=3), tiny)
+
+
+# ---------------------------------------------------------------------------
+# (c) homogeneous reduction: byte-identical to the pre-PR planner
+# ---------------------------------------------------------------------------
+
+HOMOG = ClusterSpec.homogeneous(V100_PAPER, 16)
+
+
+@pytest.mark.parametrize("strat", [
+    StrategySpec(dp=16),
+    StrategySpec(dp=8, tp=2),
+    StrategySpec(dp=8, tp=2, zero=3),
+    StrategySpec(dp=4, tp=2, pp=2, micro_batches=8),
+    StrategySpec(dp=8, pp=2, micro_batches=4, zero=1),
+])
+def test_homogeneous_cost_identical(strat):
+    """hetero_step_cost on a single-group spec == plain step_cost, term by
+    term (pp must divide n_layers, as the search enforces)."""
+    meta = _meta(batch=256)
+    assert meta.n_layers % strat.pp == 0
+    old = step_cost(meta, strat, V100_PAPER, overlap=0.5)
+    new = hetero_step_cost(meta, strat, HOMOG, overlap=0.5)
+    assert new.compute == old.compute
+    assert new.comm == old.comm
+    assert new.bubble == old.bubble
+    assert new.mem_bytes == old.mem_bytes
+    assert new.feasible == old.feasible
+
+
+def test_homogeneous_balanced_equals_naive():
+    meta = _meta(batch=256)
+    strat = StrategySpec(dp=8, tp=2)
+    b = plan_placement(meta, strat, HOMOG, overlap=0.5)
+    n = plan_placement(meta, strat, HOMOG, overlap=0.5, balanced=False)
+    assert b.batch_shares == n.batch_shares == (256,)
+    assert b.layer_alloc == n.layer_alloc
+    assert b.cost.total == n.cost.total
+
+
+def test_homogeneous_multi_group_even_split():
+    """Two identical groups: balanced shares are exactly even."""
+    spec = ClusterSpec(groups=(DeviceGroup("a", V100_PAPER, 8),
+                               DeviceGroup("b", V100_PAPER, 8)))
+    meta = _meta(batch=256)
+    shares = balance_batch(meta, StrategySpec(dp=16, zero=3), spec)
+    assert shares == (128, 128)
+
+
+def test_homogeneous_search_identical():
+    """Search over a homogeneous ClusterSpec ranks exactly like the plain
+    (devices, hw) search — same strategies, same totals, same order."""
+    meta = _meta(batch=256)
+    via_spec = search(meta, HOMOG, top_k=8, overlap=0.5)
+    plain = search(meta, 16, V100_PAPER, top_k=8, overlap=0.5)
+    assert [c.strategy for c in via_spec] == [c.strategy for c in plain]
+    assert [c.total for c in via_spec] == [c.total for c in plain]
+
+
+def test_homogeneous_mesh_identical():
+    """mesh_for_strategy with a homogeneous cluster_spec returns the same
+    mesh as without one (byte-identical plan guarantee)."""
+    import numpy as np
+    strat = StrategySpec(dp=1, tp=1)
+    m0 = mesh_for_strategy(strat)
+    m1 = mesh_for_strategy(strat, cluster_spec=ClusterSpec.homogeneous(
+        V100_PAPER, strat.devices))
+    assert m0.shape == m1.shape and m0.axis_names == m1.axis_names
+    assert np.array_equal(m0.devices, m1.devices)
+
+
+def test_mesh_rejects_straddling_strategy():
+    spec = ClusterSpec(groups=(DeviceGroup("a", V100_PAPER, 6),
+                               DeviceGroup("b", T4_16G, 10)))
+    with pytest.raises(ValueError):
+        mesh_for_strategy(StrategySpec(dp=4, tp=4), cluster_spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: search + benchmark headline
+# ---------------------------------------------------------------------------
+
+def test_hetero_search_returns_balanced_placements():
+    meta = _meta(batch=256)
+    cands = search(meta, MIXES[0], top_k=5, overlap=0.5)
+    assert cands, "mixed V100/T4 cluster must have feasible strategies"
+    totals = [c.total for c in cands]
+    assert totals == sorted(totals)
+    for c in cands:
+        assert c.placement is not None
+        assert sum(c.placement.batch_shares) == meta.batch
+        assert strategy_fits_cluster(c.strategy, MIXES[0])
+
+
+def test_hardware_aware_beats_naive_on_mixed_cluster():
+    """The fig7 headline as a test: balanced > naive even split on
+    mixed V100/T4, exact tie on homogeneous."""
+    meta = _meta(batch=256)
+    strat = StrategySpec(dp=8, pp=2, micro_batches=8, zero=1)
+    aware = plan_placement(meta, strat, MIXES[0], overlap=0.5)
+    naive = plan_placement(meta, strat, MIXES[0], overlap=0.5,
+                           balanced=False)
+    assert aware.cost.total < naive.cost.total
+
+
+def test_elastic_rebalance_picks_feasible_strategy():
+    """runtime path: re-mesh onto a different hardware mix re-plans via
+    the hetero search (plan-level check; no devices needed)."""
+    meta = _meta(batch=256)
+    cands = search(meta, MIXES[2], top_k=1, overlap=0.5)
+    assert cands and cands[0].cost.feasible
+    assert cands[0].placement.spec is MIXES[2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_fast=st.sampled_from([4, 8, 12]), n_slow=st.sampled_from([4, 8]),
+       batch=st.integers(32, 512))
+def test_batch_split_property(n_fast, n_slow, batch):
+    """Property over cluster shapes: shares sum to batch; the per-device
+    share of the fast group is >= the slow group's (monotonicity)."""
+    spec = ClusterSpec(groups=(DeviceGroup("fast", V100_PAPER, n_fast),
+                               DeviceGroup("slow", T4_16G, n_slow)))
+    meta = _meta(batch=batch)
+    strat = StrategySpec(dp=spec.n_devices, zero=3)
+    try:
+        shares = balance_batch(meta, strat, spec)
+    except ValueError:
+        return
+    assert sum(shares) == batch
+    assert shares[0] / n_fast >= shares[1] / n_slow - 1
