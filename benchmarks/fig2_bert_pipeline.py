@@ -1,6 +1,6 @@
 """Paper Fig. 2 — Bert-Large: Horovod DP vs Whale DP vs Whale pipeline.
 
-Two layers of evidence:
+Three layers of evidence:
 
 1. **Cost model at the paper's own scale** (V100-16G servers, 8 GPUs each,
    35 Gb/s shared Ethernet): throughput of the three systems at 8→64 GPUs.
@@ -10,18 +10,29 @@ Two layers of evidence:
    the full 340M-param volume, while 4-stage pipelining divides the
    all-reduce volume per DP group by the stage count.
 
-2. **Measured small-scale run** (virtual CPU devices): Whale DP vs Whale
+2. **Schedule × stage-allocation grid** (:func:`schedule_grid_rows`):
+   even vs uneven (hetero-planner) layer splits × GPipe vs 1F1B on a
+   mixed V100/P100 cluster — the bubble fraction is identical (the
+   closed form (S−1)/(M+S−1); repro.core.schedule), while 1F1B's peak
+   activation memory is min(M, S)/M of GPipe's and the uneven split buys
+   back the slow cards' latency.
+
+3. **Measured small-scale run** (virtual CPU devices): Whale DP vs Whale
    pipeline×DP on a bert-like reduced config — verifies the executable
    schedule end-to-end (losses match the non-pipelined reference).
 
-Output: CSV rows ``fig2,<system>,<gpus>,<ms_per_step>,<speedup_vs_hdp>``.
+Output: CSV rows ``fig2,<system>,<gpus>,<ms_per_step>,<speedup_vs_hdp>``
+plus the ``fig2-sched`` grid table.
 """
 from __future__ import annotations
 
 import dataclasses
 
-from repro.core.cost_model import (StrategySpec, V100_PAPER,
+from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
+                                   StrategySpec, V100_PAPER,
                                    lm_workload_meta, step_cost)
+from repro.core.schedule import (bubble_fraction_closed_form,
+                                 in_flight_micro_batches)
 
 
 def bert_large_cfg():
@@ -61,6 +72,55 @@ def model_rows(per_gpu_batch: int = 24, seq: int = 128):
                                              vocab_split=False),
                           V100_PAPER, overlap=0.5)
         rows.append((gpus, hdp.total, wdp.total, wpipe.total))
+    return rows
+
+
+def schedule_grid_rows(per_gpu_batch: int = 24, seq: int = 128):
+    """even/uneven stage split × gpipe/1f1b on 8×V100 + 8×P100, 4 stages.
+
+    → rows ``(label, layer_alloc, bubble_frac, mem_gib_peak_stage,
+    ms_per_step)``.  Invariants asserted here (and regression-tested in
+    tests/test_schedule.py): bubble identical across schedules; 1F1B peak
+    stage memory strictly below GPipe's at M > S (its in-flight
+    activation cap); the balanced allocation never loses to even on the
+    mixed cluster.
+    """
+    from repro.core.hetero import plan_placement
+    from repro.core.schedule import make_schedule
+    cfg = bert_large_cfg()
+    spec = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 8),
+                               DeviceGroup("p100", P100_16G, 8)))
+    gpus, pp, M = 16, 4, 8
+    meta = lm_workload_meta(cfg, batch=per_gpu_batch * gpus, seq=seq)
+    rows = []
+    for sched in ("gpipe", "1f1b"):
+        for balanced in (False, True):
+            strat = StrategySpec(dp=gpus // pp, pp=pp, micro_batches=M,
+                                 remat=False, vocab_split=False,
+                                 schedule=sched)
+            pl = plan_placement(meta, strat, spec, overlap=0.5,
+                                balanced=balanced)
+            act_peak = max(u.cost.mem_bytes for u in pl.units)
+            rows.append((f"{sched}-{'uneven' if balanced else 'even'}",
+                         pl.layer_alloc,
+                         # bubble measured from the generated tick table —
+                         # NOT the closed form, which it is asserted against
+                         make_schedule(sched, pp, M).bubble_fraction(),
+                         act_peak / 2**30,
+                         pl.cost.total * 1e3))
+    by = {r[0]: r for r in rows}
+    # same bubble (each measured from its own table, and matching the
+    # closed form the cost model prices); 1F1B's in-flight advantage
+    # shows up as lower peak memory
+    assert by["gpipe-even"][2] == by["1f1b-even"][2]
+    assert abs(by["gpipe-even"][2]
+               - bubble_fraction_closed_form(pp, M)) < 1e-12
+    assert by["1f1b-even"][3] < by["gpipe-even"][3]
+    assert by["1f1b-uneven"][3] < by["gpipe-uneven"][3]
+    assert (in_flight_micro_batches(pp, M, "1f1b")
+            < in_flight_micro_batches(pp, M, "gpipe"))
+    # the balanced (uneven) split must not lose to even on mixed hardware
+    assert by["1f1b-uneven"][4] <= by["1f1b-even"][4] + 1e-9
     return rows
 
 
@@ -125,6 +185,19 @@ def measured_rows(steps: int = 4):
     return rows
 
 
+def print_schedule_grid(rows) -> None:
+    print("table,config,layer_alloc,bubble_frac,mem_gib_peak_stage,"
+          "ms_per_step")
+    for label, alloc, bub, gib, ms in rows:
+        print(f"fig2-sched,{label},{'/'.join(str(x) for x in alloc)},"
+              f"{bub:.4f},{gib:.2f},{ms:.1f}")
+    by = {r[0]: r for r in rows}
+    adv = by["gpipe-uneven"][3] / by["1f1b-uneven"][3]
+    print(f"# 1F1B peak stage memory = {1 / adv:.2f}× GPipe's on the same "
+          f"uneven grid (bubble identical: "
+          f"{by['gpipe-uneven'][2]:.4f})")
+
+
 def main(csv=True) -> list:
     out = []
     rows = model_rows()
@@ -141,6 +214,7 @@ def main(csv=True) -> list:
         sp64 = [r for r in out if r[1] == "whale-pipeline" and r[2] == 64]
         print(f"# headline: whale-pipeline @64 GPUs = {sp64[0][4]:.2f}× HDP "
               f"(paper: 2.32×)")
+        print_schedule_grid(schedule_grid_rows())
     return out
 
 

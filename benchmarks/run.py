@@ -4,6 +4,8 @@
 
 Sections:
   fig2      Bert-Large HDP vs Whale DP vs Whale pipeline (paper Fig. 2)
+            + the schedule grid: even/uneven stages × GPipe/1F1B with
+            bubble-fraction and peak-stage-memory columns
   fig5      100k-class DP vs DP+split hybrid             (paper Fig. 5)
   fig7      hardware-aware vs naive split on mixed GPUs  (paper §5)
   kernels   Pallas kernel numerics vs oracle + VMEM budget
@@ -34,6 +36,8 @@ def main() -> None:
                   f"{hdp/wpipe:.2f}")
         print(f"# headline: {rows[-1][1]/rows[-1][3]:.2f}× @64 "
               f"(paper: 2.32×)")
+        print("-- schedule grid: even/uneven × gpipe/1f1b --")
+        fig2.print_schedule_grid(fig2.schedule_grid_rows())
     else:
         fig2.main()
 

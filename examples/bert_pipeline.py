@@ -59,9 +59,11 @@ def main():
     strat = wh.strategy_from_taskgraph(cl)
     print(f"[case 4] mesh {dict(mesh.shape)}")
 
-    # --- executable GPipe train step ---
-    step = pipe.make_gpipe_train_step(model, mesh, rules, opt,
-                                      micro_batches=MICRO, donate=False)
+    # --- executable pipelined train step (pick a schedule; uneven
+    #     stage_layers also welcome here — see DESIGN.md §5) ---
+    step = pipe.make_pipeline_train_step(model, mesh, rules, opt,
+                                         micro_batches=MICRO,
+                                         schedule="gpipe", donate=False)
     pspecs = pipe.staged_specs(rules, model.axes(), model.param_shapes())
     psh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspecs,
                        is_leaf=lambda t: isinstance(t, jax.sharding.PartitionSpec))

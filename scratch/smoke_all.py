@@ -40,4 +40,16 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 import benchmarks.fig7_heterogeneous as fig7
 fig7.main()
+
+# pipeline schedule smoke: tick tables validate against the closed forms
+# (full property coverage in tests/test_schedule.py) + the fig2 grid's
+# built-in assertions (same bubble, 1F1B memory advantage, uneven >= even)
+from repro.core.schedule import (bubble_fraction_closed_form, make_schedule)
+for S, M in ((2, 4), (4, 8), (3, 5)):
+    for name in ("gpipe", "1f1b"):
+        sc = make_schedule(name, S, M)
+        assert abs(sc.bubble_fraction()
+                   - bubble_fraction_closed_form(S, M)) < 1e-12
+import benchmarks.fig2_bert_pipeline as fig2
+fig2.print_schedule_grid(fig2.schedule_grid_rows())
 print("ALL OK")

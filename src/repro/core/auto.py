@@ -12,8 +12,11 @@ pruned strategy space and rank by the cost model:
 - **Pruning**: (dp, tp, pp) only ranges over divisor factorizations of the
   device count; tp is capped at the size of one pod's minor dimension
   (operator sharding across DCN is never competitive); pp over divisors of
-  the layer count; micro-batches over powers of two up to batch; infeasible
-  (OOM) points are discarded by the cost model's memory term.
+  the layer count; micro-batches over powers of two up to batch; pipelined
+  points are priced under both schedules (GPipe vs the memory-frugal 1F1B
+  — same bubble, different peak activation memory; see
+  :mod:`repro.core.schedule`); infeasible (OOM) points are discarded by
+  the cost model's memory term.
 
 Returns the ranked candidates so callers can inspect the frontier (the
 EXPERIMENTS.md §Auto table does exactly this).
@@ -56,11 +59,19 @@ class Candidate:
 def enumerate_strategies(meta: WorkloadMeta, devices, *,
                          max_tp: int = 16, max_pp: int | None = None,
                          micro_options: Iterable | None = None,
+                         schedules: Iterable | None = None,
                          ) -> list:
-    """Pruned (dp, tp, pp, micro, zero, vocab_split) enumeration.
+    """Pruned (dp, tp, pp, micro, zero, vocab_split, schedule) enumeration.
 
     ``devices`` may be a plain count or a :class:`ClusterSpec`; the latter
     adds the group-tiling prune (shards never straddle a hardware group).
+
+    ``schedules`` restricts the pipeline-schedule dimension (default both
+    ``gpipe`` and ``1f1b`` when pp > 1).  Note the 1F1B activation pricing
+    (min(M, S) in-flight) is the *schedule's* bound; the fused SPMD
+    engine in :mod:`repro.core.pipeline` materializes gpipe-order memory
+    under autodiff — pass ``schedules=("gpipe",)`` to search for that
+    engine's HBM envelope (the executor warns on the mismatch too).
     """
     spec = devices if isinstance(devices, ClusterSpec) else None
     if spec is not None:
@@ -83,13 +94,20 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
                 continue
             micros = micro_options or [m for m in (1, 2, 4, 8, 16, 32)
                                        if meta.batch // dp >= m]
+            # pipelined points price both schedules: same bubble, but 1F1B
+            # buffers min(M, S) in-flight micro-batches vs GPipe's M — the
+            # memory term decides which (if either) fits
+            scheds = (tuple(schedules) if schedules is not None
+                      else ("gpipe", "1f1b")) if pp > 1 else ("gpipe",)
             for m in (micros if pp > 1 else [1]):
                 for zero in ((0, 1, 3) if dp > 1 else (0,)):
                     for vs in ((True, False) if tp > 1 else (False,)):
                         for of in (False, True):
-                            out.append(StrategySpec(
-                                dp=dp, tp=tp, pp=pp, micro_batches=m,
-                                zero=zero, vocab_split=vs, opt_factored=of))
+                            for sched in scheds:
+                                out.append(StrategySpec(
+                                    dp=dp, tp=tp, pp=pp, micro_batches=m,
+                                    zero=zero, vocab_split=vs,
+                                    opt_factored=of, schedule=sched))
     return out
 
 

@@ -226,6 +226,9 @@ class StrategySpec:
     remat: bool = True
     vocab_split: bool = True
     opt_factored: bool = False     # adafactor-style O(N/d) second moments
+    # pipeline schedule (repro.core.schedule): "gpipe" holds all M
+    # micro-batches of activations in flight; "1f1b" caps at min(M, pp)
+    schedule: str = "gpipe"
 
     @property
     def devices(self) -> int:
@@ -238,7 +241,8 @@ class StrategySpec:
         if self.tp > 1:
             bits.append(f"split×{self.tp}")
         if self.pp > 1:
-            bits.append(f"pipeline×{self.pp}(µb={self.micro_batches})")
+            sched = "" if self.schedule == "gpipe" else f",{self.schedule}"
+            bits.append(f"pipeline×{self.pp}(µb={self.micro_batches}{sched})")
         if self.opt_factored:
             bits.append("adafactor")
         if not bits:
@@ -359,10 +363,14 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
     detail["comm"] = t_comm
 
     # ---- pipeline bubble ----
+    # (S−1)/(M+S−1) for both shipped schedules — 1F1B reorders work inside
+    # the span, it does not shrink it (repro.core.schedule validates the
+    # tick tables against this closed form)
     t_bubble = 0.0
     if pp > 1:
+        from repro.core.schedule import bubble_fraction_closed_form
         m = max(strat.micro_batches, 1)
-        t_bubble = t_compute * (pp - 1) / (m + pp - 1)
+        t_bubble = t_compute * bubble_fraction_closed_form(pp, m)
     detail["bubble"] = t_bubble
 
     # ---- memory ----
@@ -384,7 +392,10 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
     act_live = meta.act_bytes_per_layer / dp / mb * (
         2.0 + (0 if strat.remat else meta.n_layers / pp))
     if pp > 1:
-        act_live *= min(mb, pp)   # in-flight micro-batches
+        # schedule-dependent in-flight micro-batches: GPipe must buffer all
+        # M at its peak, 1F1B caps at min(M, S) (repro.core.schedule)
+        from repro.core.schedule import in_flight_micro_batches
+        act_live *= in_flight_micro_batches(pp, mb, strat.schedule)
     logits_live = 0.0
     if meta.logits_bytes:
         logits_live = meta.logits_bytes / dp / (tp if strat.vocab_split else 1)

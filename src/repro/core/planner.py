@@ -222,9 +222,13 @@ class ExecutionPlan:
             if M <= 1:
                 g, loss, metrics = grads_of(params, batch)
                 return g, loss, metrics
-            split = jax.tree.map(
-                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
-                batch)
+
+            def to_micro(x):
+                from repro.core.pipeline import check_micro_divides
+                check_micro_divides(x.shape[0], M)
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+
+            split = jax.tree.map(to_micro, batch)
 
             def body(carry, mb):
                 acc, loss_sum = carry
@@ -298,6 +302,64 @@ class ExecutionPlan:
         return jax.jit(fn, in_shardings=in_sh,
                        out_shardings=(pspec, ospec, rep),
                        donate_argnums=(0, 1) if donate else ())
+
+    # ---- pipelined training (pp > 1; the schedule subsystem) ----
+    def stage_layers(self):
+        """Per-stage pattern-repeat counts for this plan's pipeline.
+
+        Uneven when the plan carries a balanced :class:`HeteroPlacement`
+        (its latency-equalizing ``layer_alloc``), else the even split.
+        """
+        import repro.core.pipeline as pipe
+        S = self.strategy.pp
+        if self.placement is not None and len(
+                self.placement.layer_alloc) == S:
+            return pipe.stage_layers_from_alloc(
+                self.model.stack, self.placement.layer_alloc)
+        return pipe.even_stage_layers(self.model.stack.n_rep, S)
+
+    def jit_pipeline_train_step(self, optimizer, *,
+                                micro_batches: int | None = None,
+                                schedule: str | None = None,
+                                stage_layers=None,
+                                donate: bool = True):
+        """Jitted (params, opt_state, tokens, step) → (params, opt_state,
+        loss) through the pipeline executor (paper Cases 3–4).
+
+        Requires a ``stage`` mesh axis (``mesh_for_strategy`` adds one for
+        ``pp > 1`` plans).  Stage layer counts come from
+        :meth:`stage_layers` — a heterogeneous plan's uneven allocation
+        executes as-is — and the schedule defaults to the plan's
+        ``strategy.schedule``.  Params/optimizer state use the padded
+        stage-sharded layout of ``pipeline_params`` (identity for even
+        splits).
+        """
+        import repro.core.pipeline as pipe
+        if self.strategy.pp <= 1 or "stage" not in self.mesh.shape:
+            raise ValueError(
+                f"pipeline step needs pp > 1 and a 'stage' mesh axis; "
+                f"strategy is {self.strategy.describe()}, mesh axes "
+                f"{tuple(self.mesh.shape)}")
+        return pipe.make_pipeline_train_step(
+            self.model, self.mesh, self.rules, optimizer,
+            micro_batches=micro_batches or self.strategy.micro_batches or 1,
+            stage_layers=stage_layers or self.stage_layers(),
+            schedule=schedule or self.strategy.schedule,
+            donate=donate)
+
+    def init_pipeline_params(self, key, *, stage_layers=None):
+        """Initialise params directly into the pipeline's (possibly
+        padded) stage-sharded layout."""
+        import repro.core.pipeline as pipe
+        sl = stage_layers or self.stage_layers()
+        pspecs = pipe.staged_specs(self.rules, self.param_axes,
+                                   pipe._padded_model_shapes(self.model, sl))
+        psh = _ns(self.mesh, pspecs)
+        with self.mesh:
+            return jax.jit(
+                lambda k: pipe.pipeline_params(self.model,
+                                               self.model.init(k), sl),
+                out_shardings=psh)(key)
 
     # ---- serving ----
     def jit_serve_step(self, batch: int, cache_len: int, donate: bool = True):

@@ -52,14 +52,16 @@ DEFAULT_OUT = "bench_out/dryrun.jsonl"
 # ---------------------------------------------------------------------------
 
 def production_strategy(mesh, *, micro_batches: int = 8,
-                        zero: int = 3) -> StrategySpec:
+                        zero: int = 3,
+                        schedule: str = "gpipe") -> StrategySpec:
     dp = 1
     for a in ("pod", "data"):
         if a in mesh.shape:
             dp *= mesh.shape[a]
     return StrategySpec(dp=dp, tp=mesh.shape.get("model", 1),
+                        pp=mesh.shape.get("stage", 1),
                         micro_batches=micro_batches, zero=zero,
-                        vocab_split=True)
+                        vocab_split=True, schedule=schedule)
 
 
 # per-arch production train settings: the ≥50B-param archs need factored
@@ -135,6 +137,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
              context_parallel: bool = False,
              shard_grads: bool = False,
              mesh_shape: tuple | None = None,
+             schedule: str = "gpipe",
              tag: str = "") -> dict:
     t_start = time.time()
     if mesh_shape is not None:               # perf-iteration mesh override
@@ -168,7 +171,9 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool = False,
             dp_sz *= mesh.shape.get(a, 1)
         while micro > 1 and cell.global_batch % (micro * dp_sz):
             micro //= 2
-    strat = strategy or production_strategy(mesh, micro_batches=micro)
+    strat = strategy or production_strategy(mesh, micro_batches=micro,
+                                            schedule=schedule)
+    rec["schedule"] = strat.schedule
     from repro.core.sharding import hybrid_rules
     rules = hybrid_rules(mesh, fsdp=strat.zero >= 3,
                          context_parallel=context_parallel)
@@ -322,6 +327,11 @@ def main() -> None:
                     help="override mesh, e.g. 32x8 (data×model) — perf knob")
     ap.add_argument("--no-vocab-split", action="store_true",
                     help="ablate the paper's Fig-4 split-classifier technique")
+    ap.add_argument("--schedule", choices=("gpipe", "1f1b"), default="gpipe",
+                    help="pipeline schedule recorded on the strategy and in "
+                         "the JSONL (production meshes have no stage axis, "
+                         "so it prices nothing until a pp>1 mesh is used; "
+                         "repro.core.schedule)")
     ap.add_argument("--tag", default="", help="label for the JSONL record")
     args = ap.parse_args()
 
@@ -347,13 +357,14 @@ def main() -> None:
                 if mesh_shape else make_production_mesh(
                     multi_pod=args.multi_pod))
         strategy = dataclasses.replace(
-            production_strategy(base, micro_batches=args.micro_batches),
+            production_strategy(base, micro_batches=args.micro_batches,
+                                schedule=args.schedule),
             vocab_split=False)
     rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
                    micro_batches=args.micro_batches, overrides=overrides,
                    context_parallel=args.context_parallel,
                    shard_grads=args.shard_grads, mesh_shape=mesh_shape,
-                   strategy=strategy, tag=args.tag)
+                   schedule=args.schedule, strategy=strategy, tag=args.tag)
     _append(rec, args.out)
     if rec["status"] == "ok":
         print(f"{rec['arch']} {rec['shape']} mesh={rec['mesh']} "

@@ -52,7 +52,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mesh", default="", help="e.g. 4x2 = data4 × model2")
-    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--micro-batches", type=int, default=None,
+                    help="default: the plan's choice (1 when unplanned)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages (adds a 'stage' mesh axis)")
+    ap.add_argument("--schedule", choices=("gpipe", "1f1b"), default=None,
+                    help="pipeline schedule (repro.core.schedule); "
+                         "default: the plan's choice")
+    ap.add_argument("--stage-layers", default="",
+                    help="comma layer-repeats per stage (uneven pipelines, "
+                         "e.g. 3,2,2,1); default even split")
     ap.add_argument("--optimizer", choices=("adamw", "adafactor"),
                     default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -89,11 +98,28 @@ def main(argv=None) -> dict:
         print(f"[auto] chose: {strat.describe()}")
         from repro.core.planner import mesh_for_strategy
         mesh = mesh_for_strategy(strat)
+    elif args.pp > 1:
+        n = len(jax.devices())
+        if n < args.pp or n % args.pp:
+            raise SystemExit(
+                f"--pp {args.pp} needs a device count divisible by the "
+                f"stage count; have {n} device(s)")
+        strat = StrategySpec(dp=n // args.pp, pp=args.pp,
+                             micro_batches=args.micro_batches or 1,
+                             schedule=args.schedule or "gpipe")
+        from repro.core.planner import mesh_for_strategy
+        mesh = mesh_for_strategy(strat)
     else:
         mesh = parse_mesh(args.mesh) if args.mesh else jax.make_mesh(
             (len(jax.devices()),), ("data",))
         strat = None
     plan = compile_plan(model, mesh, strategy=strat)
+    pipelined = plan.strategy.pp > 1 and "stage" in mesh.shape
+    if pipelined:
+        print(f"[pipeline] {plan.strategy.pp} stages, schedule "
+              f"{args.schedule or plan.strategy.schedule}, µb="
+              f"{args.micro_batches or plan.strategy.micro_batches}, "
+              f"stage_layers {args.stage_layers or 'even/plan'}")
 
     # ---- optimizer / data / checkpoint ----
     sched = Schedule(base_lr=args.lr, warmup=min(100, args.steps // 10 + 1),
@@ -105,9 +131,21 @@ def main(argv=None) -> dict:
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
 
     # ---- init or resume ----
-    with mesh:
-        params = plan.init_params(jax.random.key(args.seed))
-        opt_state = jax.jit(opt.init)(params)
+    if pipelined:
+        import repro.core.pipeline as pipe
+        stage_layers = None
+        if args.stage_layers:
+            stage_layers = tuple(int(x) for x in args.stage_layers.split(","))
+            pipe.check_stage_layers(stage_layers, model.stack.n_rep,
+                                    plan.strategy.pp)
+        params = plan.init_pipeline_params(jax.random.key(args.seed),
+                                           stage_layers=stage_layers)
+        with mesh:
+            opt_state = jax.jit(opt.init)(params)
+    else:
+        with mesh:
+            params = plan.init_params(jax.random.key(args.seed))
+            opt_state = jax.jit(opt.init)(params)
     start_step = 0
     resume = ckpt.restore_latest({"params": params, "opt": opt_state})
     if resume is not None:
@@ -119,9 +157,14 @@ def main(argv=None) -> dict:
 
     batch0 = data.next_batch()
     with mesh:
-        step_fn = plan.jit_train_step(
-            opt, batch0, micro_batches=args.micro_batches,
-            compress_pod=args.compress_pod)
+        if pipelined:
+            step_fn = plan.jit_pipeline_train_step(
+                opt, micro_batches=args.micro_batches,
+                schedule=args.schedule, stage_layers=stage_layers)
+        else:
+            step_fn = plan.jit_train_step(
+                opt, batch0, micro_batches=args.micro_batches,
+                compress_pod=args.compress_pod)
 
     n_params = param_count(params)
     print(f"[train] {cfg.name}: {n_params:,} params, mesh "
@@ -137,7 +180,11 @@ def main(argv=None) -> dict:
     def one_step(i, st):
         batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
         with mesh:
-            if "err" in st:
+            if pipelined:
+                p, o, loss = step_fn(st["params"], st["opt"],
+                                     batch["tokens"], jnp.asarray(i))
+                new, m = {"params": p, "opt": o}, {"loss": loss}
+            elif "err" in st:
                 p, o, m, e = step_fn(st["params"], st["opt"], batch,
                                      jnp.asarray(i), st["err"])
                 new = {"params": p, "opt": o, "err": e}
