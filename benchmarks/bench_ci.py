@@ -1,0 +1,105 @@
+"""CI benchmark-regression gate: run the analytic benchmarks, record the
+headline numbers, fail on regression below the recorded floors.
+
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR4.json]
+
+The analytic (cost-model) benchmarks are deterministic — pure arithmetic
+over hardware tables, no execution, no timing noise — so they can be gated
+hard in CI.  This script runs fig2 (schedule grid), fig7 (heterogeneous
+balancing), and fig9 (nested DP×EP MoE), writes every headline metric to a
+JSON artifact, and exits non-zero if any gated metric falls below its
+floor:
+
+    fig7_hetero_speedup      >= 2.5   (aware vs naive on mixed V100/P100)
+    fig2_uneven_speedup      >= 2.5   (uneven vs even stages, mixed cluster)
+    fig9_nested_vs_flat      >  1.0   (nested replica{split[experts]} vs
+                                       flat DP on the M6-like MoE)
+
+Floors are deliberately below the current values (2.77 / 2.66 / 1.98) so
+legitimate cost-model refinements have headroom, while a change that
+destroys a headline win (the balancer, the schedule memory model, the ep
+pricing) fails the ``bench`` CI job loudly.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+FLOORS = {
+    "fig7_hetero_speedup": 2.5,
+    "fig2_uneven_speedup": 2.5,
+    "fig9_nested_vs_flat_speedup": 1.0,
+}
+
+
+def collect() -> dict:
+    import benchmarks.fig2_bert_pipeline as fig2
+    import benchmarks.fig7_heterogeneous as fig7
+    import benchmarks.fig9_m6_moe as fig9
+
+    out: dict = {"floors": dict(FLOORS)}
+
+    # ---- fig2: pipeline vs HDP + the schedule grid ----
+    model_rows = fig2.model_rows()
+    gpus, hdp, _, wpipe = model_rows[-1]
+    out["fig2_pipeline_vs_hdp_at_64"] = hdp / wpipe
+    grid = {r[0]: r for r in fig2.schedule_grid_rows()}
+    out["fig2_uneven_speedup"] = grid["1f1b-even"][4] / grid["1f1b-uneven"][4]
+    out["fig2_bubble_fraction"] = grid["gpipe-even"][2]
+    out["fig2_1f1b_mem_advantage"] = (grid["gpipe-uneven"][3]
+                                      / grid["1f1b-uneven"][3])
+    out["fig2_step_ms"] = {k: r[4] for k, r in grid.items()}
+
+    # ---- fig7: hardware-aware vs naive on mixed clusters ----
+    f7 = fig7.rows()
+    hetero = [(m, c, tn, ta) for m, c, tn, ta, _ in f7 if "homog" not in c]
+    out["fig7_hetero_speedup"] = max(tn / ta for _, _, tn, ta in hetero)
+    out["fig7_step_ms"] = {f"{m}/{c}": ta * 1e3 for m, c, _, ta in hetero}
+    homog = [(tn, ta) for m, c, tn, ta, _ in f7 if "homog" in c]
+    out["fig7_homog_speedup"] = max(tn / ta for tn, ta in homog)
+
+    # ---- fig9: nested DP×EP vs flat DP (runs its own assertions) ----
+    f9 = fig9.main(csv=False)
+    out["fig9_nested_vs_flat_speedup"] = f9["nested_vs_flat_speedup"]
+    out["fig9_flat_oom_on_32e"] = f9["flat_oom_on_32e"]
+    out["fig9_nested_fits_32e"] = f9["nested_fits_32e"]
+    return out
+
+
+def gate(metrics: dict) -> list:
+    failures = []
+    for key, floor in FLOORS.items():
+        val = metrics.get(key)
+        strict = key.startswith("fig9")
+        ok = val is not None and (val > floor if strict else val >= floor)
+        if not ok:
+            failures.append(f"{key} = {val} regressed below floor {floor}")
+    # structural invariants the trajectory relies on
+    if abs(metrics.get("fig7_homog_speedup", 1.0) - 1.0) > 1e-9:
+        failures.append("homogeneous cluster no longer reduces to the "
+                        "even split (fig7_homog_speedup != 1.0)")
+    if not metrics.get("fig9_nested_fits_32e"):
+        failures.append("nested DP×EP no longer fits the 32-expert M6 "
+                        "config")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_PR4.json")
+    args = ap.parse_args(argv)
+    metrics = collect()
+    with open(args.out, "w") as f:
+        json.dump(metrics, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+    for k in sorted(FLOORS):
+        print(f"  {k}: {metrics[k]:.3f} (floor {FLOORS[k]})")
+    failures = gate(metrics)
+    for msg in failures:
+        print(f"BENCH REGRESSION: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -57,7 +57,7 @@ def main():
                 with wh.stage():
                     pass
     strat = wh.strategy_from_taskgraph(cl)
-    print(f"[case 4] mesh {dict(mesh.shape)}")
+    print(f"[case 4] mesh {dict(mesh.shape)} strategy {strat.describe()}")
 
     # --- executable pipelined train step (pick a schedule; uneven
     #     stage_layers also welcome here — see DESIGN.md §5) ---

@@ -10,7 +10,6 @@ for the full run.  The config is tinyllama shrunk to ~100M params (d_model
         PYTHONPATH=src python examples/train_100m.py --steps 300
 """
 import argparse
-import sys
 
 from repro.launch.train import main as train_main
 

@@ -52,4 +52,22 @@ for S, M in ((2, 4), (4, 8), (3, 5)):
                    - bubble_fraction_closed_form(S, M)) < 1e-12
 import benchmarks.fig2_bert_pipeline as fig2
 fig2.print_schedule_grid(fig2.schedule_grid_rows())
+
+# nested-hybrid smoke: the fig9 M6 comparison (flat DP OOMs, nested DP×EP
+# fits and wins) with its built-in assertions, plus the graph optimizer's
+# bridge insertion on a traced replica{split[experts]} nest
+import benchmarks.fig9_m6_moe as fig9
+fig9.main()
+import repro as wh
+with wh.cluster(mesh_shape=(1, 1), axis_names=("data", "model")) as _cl:
+    with wh.replica():
+        _h = wh.sub("attn", lambda p, x: x @ p["w"])(
+            {"w": jnp.ones((8, 8))}, jnp.ones((4, 8)))
+        with wh.split(experts=True):
+            _h = wh.sub("moe", lambda p, x: x @ p["w"])(
+                {"w": jnp.ones((8, 8))}, _h)
+_low = wh.lower(_cl)
+assert _low.bridges("all_to_all"), _low.describe()
+assert _low.max_nesting_depth == 2
+print("graph_opt:", _low.describe())
 print("ALL OK")

@@ -13,10 +13,16 @@ from repro.core.cost_model import (ClusterSpec, DeviceGroup, Hardware,  # noqa: 
                                    P100_16G, StrategySpec, T4_16G, TPU_V5E,
                                    V100_PAPER, WorkloadMeta, lm_workload_meta,
                                    step_cost, throughput)
+from repro.core.graph_opt import (GradAgg, LoweredGraph,  # noqa: F401
+                                  StrategyNestingError, bridge_cost,
+                                  compile_nested_plan, insert_bridges,
+                                  lower, place_grad_aggregation, plan_bridge,
+                                  validate_nesting)
 from repro.core.hetero import (HeteroPlacement, balance_batch,  # noqa: F401
                                balance_stages, hetero_step_cost,
                                plan_placement)
-from repro.core.ir import Subgraph, TaskGraph, TensorMeta, capture_meta  # noqa: F401
+from repro.core.ir import (Bridge, Edge, Subgraph, TaskGraph,  # noqa: F401
+                           TensorMeta, capture_meta)
 from repro.core.planner import (ExecutionPlan, compile_plan,  # noqa: F401
                                 compile_plan_from_cluster, mesh_for_strategy,
                                 rules_for_strategy, strategy_from_taskgraph)

@@ -32,7 +32,6 @@ slowest group dominating, and discarded if any group's HBM overflows.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterable
 
 from repro.core.cost_model import (ClusterSpec, CostBreakdown, Hardware,
@@ -79,18 +78,22 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
         devices = spec.n_devices
     max_pp = max_pp or min(meta.n_layers, 16)
     out = []
-    for tp in divisors(devices):
-        if tp > max_tp:
+    for mp in divisors(devices):     # size of the model mesh axis
+        if mp > max_tp:
             continue
-        rest = devices // tp
+        # how the model axis is used: flat operator split (tp), and — for
+        # MoE workloads whose expert count it divides — the *nested*
+        # replica{split[experts]} hybrid (ep), the paper's §4 nesting
+        axis_uses = [{"tp": mp, "ep": 1}]
+        if (mp > 1 and meta.n_moe_layers
+                and meta.n_experts and meta.n_experts % mp == 0):
+            axis_uses.append({"tp": 1, "ep": mp})
+        rest = devices // mp
         for pp in divisors(rest):
             if pp > max_pp or meta.n_layers % pp:
                 continue
             dp = rest // pp
             if meta.batch % dp:
-                continue
-            if spec is not None and not strategy_fits_cluster(
-                    StrategySpec(dp=dp, tp=tp, pp=pp), spec):
                 continue
             micros = micro_options or [m for m in (1, 2, 4, 8, 16, 32)
                                        if meta.batch // dp >= m]
@@ -99,15 +102,21 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
             # memory term decides which (if either) fits
             scheds = (tuple(schedules) if schedules is not None
                       else ("gpipe", "1f1b")) if pp > 1 else ("gpipe",)
-            for m in (micros if pp > 1 else [1]):
-                for zero in ((0, 1, 3) if dp > 1 else (0,)):
-                    for vs in ((True, False) if tp > 1 else (False,)):
-                        for of in (False, True):
-                            for sched in scheds:
-                                out.append(StrategySpec(
-                                    dp=dp, tp=tp, pp=pp, micro_batches=m,
-                                    zero=zero, vocab_split=vs,
-                                    opt_factored=of, schedule=sched))
+            for use in axis_uses:
+                if spec is not None and not strategy_fits_cluster(
+                        StrategySpec(dp=dp, pp=pp, **use), spec):
+                    continue
+                tp = use["tp"]
+                for m in (micros if pp > 1 else [1]):
+                    for zero in ((0, 1, 3) if dp > 1 else (0,)):
+                        for vs in ((True, False) if tp > 1 else (False,)):
+                            for of in (False, True):
+                                for sched in scheds:
+                                    out.append(StrategySpec(
+                                        dp=dp, pp=pp, micro_batches=m,
+                                        zero=zero, vocab_split=vs,
+                                        opt_factored=of, schedule=sched,
+                                        **use))
     return out
 
 

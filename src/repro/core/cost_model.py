@@ -213,10 +213,19 @@ def p2p_time(bytes_: float, bw: float) -> float:
 class StrategySpec:
     """A point in Whale's strategy space for one TaskGraph.
 
-    dp × tp × pp must equal the device count.  ``zero`` ∈ {0, 1, 2, 3}
-    (stage-3 = FSDP: params sharded over dp).  ``vocab_split`` shards the
-    classifier head over tp (the paper's Fig-4 technique).  ``micro_batches``
-    only matters when pp > 1 (GPipe) or when used for grad accumulation.
+    dp × max(tp, ep) × pp must equal the device count.  ``zero`` ∈
+    {0, 1, 2, 3} (stage-3 = FSDP: params sharded over dp).  ``vocab_split``
+    shards the classifier head over tp (the paper's Fig-4 technique).
+    ``micro_batches`` only matters when pp > 1 (GPipe) or when used for
+    grad accumulation.
+
+    ``ep`` is the *nested* expert-parallel degree — the paper's
+    ``replicate{split}`` hybrid (§4, the M6 recipe): DP outer, the MoE
+    layers' ``experts`` dimension split over the model axis inner.  Expert
+    weights shard ep-ways, the dense layers see the model axis as extra
+    data parallelism, and dispatch/combine become all-to-all bridges
+    (:mod:`repro.core.graph_opt`).  ``ep`` rides the same mesh axis as
+    ``tp`` — when both exceed 1 they must be equal.
     """
     dp: int = 1
     tp: int = 1
@@ -229,17 +238,41 @@ class StrategySpec:
     # pipeline schedule (repro.core.schedule): "gpipe" holds all M
     # micro-batches of activations in flight; "1f1b" caps at min(M, pp)
     schedule: str = "gpipe"
+    # nested expert parallelism: experts split over the model axis inside
+    # each data-parallel replica (replica{split} — Whale §4 nesting)
+    ep: int = 1
+
+    def __post_init__(self):
+        if self.ep < 1:
+            raise ValueError(f"ep must be >= 1, got {self.ep}")
+        if self.ep > 1 and self.tp > 1 and self.ep != self.tp:
+            raise ValueError(
+                f"nested ep={self.ep} and tp={self.tp} ride the same model "
+                f"axis and must be equal when both exceed 1")
+
+    @property
+    def model_parallel(self) -> int:
+        """Size of the model mesh axis: operator split and expert split
+        share it (ep == tp when both are active)."""
+        return max(self.tp, self.ep)
 
     @property
     def devices(self) -> int:
-        return self.dp * self.tp * self.pp
+        return self.dp * self.model_parallel * self.pp
 
     def describe(self) -> str:
         bits = []
-        if self.dp > 1:
-            bits.append(f"replica×{self.dp}" + (f"+zero{self.zero}" if self.zero else ""))
+        inner = []
         if self.tp > 1:
-            bits.append(f"split×{self.tp}")
+            inner.append(f"split×{self.tp}")
+        if self.ep > 1:
+            inner.append(f"split[experts]×{self.ep}")
+        if self.dp > 1:
+            nest = "{" + " ".join(inner) + "}" if inner else ""
+            bits.append(f"replica×{self.dp}"
+                        + (f"+zero{self.zero}" if self.zero else "") + nest)
+        else:
+            bits.extend(inner)
         if self.pp > 1:
             sched = "" if self.schedule == "gpipe" else f",{self.schedule}"
             bits.append(f"pipeline×{self.pp}(µb={self.micro_batches}{sched})")
@@ -273,6 +306,14 @@ class WorkloadMeta:
     # grad/optimizer bytes per param byte (AdamW fp32: grads 1 + m 1 + v 1)
     opt_state_factor: float = 2.0
     grad_factor: float = 1.0
+    # MoE terms (zero for dense models — every ep-aware path then
+    # reduces exactly to the flat pricing):
+    n_experts: int = 0             # routed experts per MoE layer
+    n_moe_layers: int = 0          # layers carrying an expert block
+    expert_param_bytes: float = 0.0   # total expert-weight bytes (all layers)
+    # routed-token dispatch buffer bytes per MoE layer, global batch
+    # (B·S·top_k·capacity_factor·d_model·act_bytes) — the all-to-all payload
+    moe_dispatch_bytes: float = 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -303,28 +344,57 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
     ``overlap`` ∈ [0, 1): fraction of DP gradient communication hidden under
     backward compute (XLA latency hiding / Horovod fusion both give ~some).
     """
-    dp, tp, pp = strat.dp, strat.tp, strat.pp
+    dp, tp, pp, ep = strat.dp, strat.tp, strat.pp, strat.ep
     detail: dict = {}
 
     # ---- compute ----
     train_flops = meta.fwd_flops * (4.0 if strat.remat else 3.0)
-    shards = dp * tp * pp       # every device computes 1/shards of the work
+    # every device computes 1/devices of the work: under nested ep the
+    # model axis acts as extra data parallelism for the dense layers and
+    # spreads routed tokens across expert shards for the MoE layers
+    shards = strat.devices
     t_compute = train_flops / shards / (hw.peak_flops * hw.mxu_eff)
     detail["compute"] = t_compute
 
     # ---- communication ----
     t_comm = 0.0
-    # (a) DP gradient all-reduce (or reduce-scatter+all-gather under ZeRO)
-    grad_bytes = meta.param_bytes * meta.grad_factor / (tp * pp)
+    # (a) DP gradient all-reduce (or reduce-scatter+all-gather under ZeRO).
+    #     Under nested ep the expert grads are already ep-sharded — their
+    #     reduction rides only the (slow) data axis at 1/ep the volume —
+    #     while dense-layer grads additionally reduce over the model axis
+    #     (its shards saw different batch slices).
+    exp_bytes = meta.expert_param_bytes if ep > 1 else 0.0
+    grad_bytes = (meta.param_bytes - exp_bytes) * meta.grad_factor / (tp * pp)
     if dp > 1:
         t_dp = all_reduce_time(grad_bytes, dp, hw.bw_for_axis("data"))
+        if ep > 1 and exp_bytes:
+            t_dp += all_reduce_time(exp_bytes * meta.grad_factor / (ep * pp),
+                                    dp, hw.bw_for_axis("data"))
         t_dp *= (1.0 - overlap)
         t_comm += t_dp
         detail["dp_allreduce"] = t_dp
-    # (b) ZeRO-3 param all-gather each fwd+bwd (2×) over dp
+    if ep > 1 and tp == 1:
+        # dense grads reduce across the ep shards (fast model axis)
+        t_ep_ar = all_reduce_time(grad_bytes, ep, hw.bw_for_axis("model"))
+        t_ep_ar *= (1.0 - overlap)
+        t_comm += t_ep_ar
+        detail["ep_dense_allreduce"] = t_ep_ar
+    # (a') expert dispatch/combine all-to-all bridges: 2 forward + 2
+    #      backward per MoE layer, each moving the routed-token buffer
+    #      (batch-sharded over dp) across the ep group on the model axis
+    if ep > 1 and meta.n_moe_layers and meta.moe_dispatch_bytes:
+        n_a2a = 4 * max(meta.n_moe_layers // pp, 1)
+        t_a2a = n_a2a * all_to_all_time(meta.moe_dispatch_bytes / dp, ep,
+                                        hw.bw_for_axis("model"))
+        t_comm += t_a2a
+        detail["ep_all_to_all"] = t_a2a
+    # (b) ZeRO-3 param all-gather each fwd+bwd (2×) over dp — under
+    #     nested ep the expert weights are already ep-sharded, so only
+    #     1/ep of them is gathered (matching the memory model below)
     if strat.zero >= 3 and dp > 1:
-        t_ag = 2 * all_gather_time(meta.param_bytes / (tp * pp), dp,
-                                   hw.bw_for_axis("data"))
+        ag_bytes = ((meta.param_bytes - exp_bytes) / tp
+                    + (exp_bytes / ep if ep > 1 else 0.0)) / pp
+        t_ag = 2 * all_gather_time(ag_bytes, dp, hw.bw_for_axis("data"))
         t_comm += t_ag
         detail["fsdp_allgather"] = t_ag
     # (c) TP activation all-reduces: 2 per layer fwd, 2 per layer bwd
@@ -338,7 +408,6 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
         if strat.vocab_split and meta.logits_bytes:
             # Fig-4 path: only 3 scalar-ish reductions per loss chunk — model
             # as 3 all-reduces of (B·S) fp32 rows (max/sumexp/correct).
-            rows = meta.logits_bytes and (meta.batch and meta.logits_bytes)
             row_bytes = meta.logits_bytes / max(
                 1, (meta.logits_bytes // (4 * meta.batch)) or 1)
             t_head = 3 * all_reduce_time(row_bytes / dp, tp,
@@ -374,22 +443,36 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
     detail["bubble"] = t_bubble
 
     # ---- memory ----
-    # params: sharded by tp (shardable part) & pp; zero-3 also by dp
-    p_shard = (meta.tp_shardable_param_bytes / tp
-               + (meta.param_bytes - meta.tp_shardable_param_bytes)) / pp
+    # params: sharded by tp (shardable part) & pp; zero-3 also by dp;
+    # under nested ep the expert weights shard ep-ways instead (the M6
+    # feasibility lever: flat DP replicates every expert on every device)
+    if ep > 1 and meta.expert_param_bytes:
+        exp = min(meta.expert_param_bytes, meta.tp_shardable_param_bytes)
+        p_shard = (exp / ep + (meta.tp_shardable_param_bytes - exp) / tp
+                   + (meta.param_bytes - meta.tp_shardable_param_bytes)) / pp
+        sharded_bytes = exp / ep + (meta.param_bytes - exp) / tp
+    else:
+        p_shard = (meta.tp_shardable_param_bytes / tp
+                   + (meta.param_bytes - meta.tp_shardable_param_bytes)) / pp
+        sharded_bytes = meta.param_bytes / tp
     if strat.zero >= 3:
         p_shard /= dp
     opt_factor = 0.05 if strat.opt_factored else meta.opt_state_factor
-    opt = meta.param_bytes * opt_factor / (tp * pp)
+    opt = sharded_bytes * opt_factor / pp
     if strat.zero >= 1:
         opt /= dp
-    grads = meta.param_bytes * meta.grad_factor / (tp * pp)
+    grads = sharded_bytes * meta.grad_factor / pp
     if strat.zero >= 2:
         grads /= dp
     # activations: with remat only ~1 layer's working set + per-layer
-    # residuals are live; without, all layers
+    # residuals are live; without, all layers.  Under nested ep with no
+    # tensor split the model axis is extra data parallelism for the dense
+    # layers, so the batch (and with it the activation working set)
+    # shards over dp·ep; with ep == tp the model axis is doing tensor
+    # parallelism and the batch stays dp-sharded (flat accounting).
     mb = max(strat.micro_batches, 1)
-    act_live = meta.act_bytes_per_layer / dp / mb * (
+    act_dp = dp * (ep if (ep > 1 and tp == 1) else 1)
+    act_live = meta.act_bytes_per_layer / act_dp / mb * (
         2.0 + (0 if strat.remat else meta.n_layers / pp))
     if pp > 1:
         # schedule-dependent in-flight micro-batches: GPipe must buffer all
@@ -398,9 +481,10 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
         act_live *= in_flight_micro_batches(pp, mb, strat.schedule)
     logits_live = 0.0
     if meta.logits_bytes:
-        logits_live = meta.logits_bytes / dp / (tp if strat.vocab_split else 1)
+        logits_live = meta.logits_bytes / act_dp / (
+            tp if strat.vocab_split else 1)
         if strat.vocab_split:
-            logits_live = min(logits_live, meta.logits_bytes / dp / tp)
+            logits_live = min(logits_live, meta.logits_bytes / act_dp / tp)
     mem = p_shard + opt + grads + act_live + logits_live
     detail["mem"] = mem
 
@@ -459,7 +543,6 @@ def lm_workload_meta(cfg, batch: int, seq: int,
         inter = 2 * T * H * P * N * 2
         return proj + intra + inter
 
-    per_layer = 0.0
     n_attn = n_ssd = n_moe = n_dense = 0
     if cfg.family in ("dense", "vlm"):
         n_attn, n_dense = L, L
@@ -507,9 +590,24 @@ def lm_workload_meta(cfg, batch: int, seq: int,
     act_per_layer = T * E * act_dtype_bytes * 4   # x + 3 intermediates
     logits_bytes = T * V * 4                       # fp32 logits if formed
 
+    # MoE metadata for the nested replica{split} expert-parallel pricing:
+    # routed expert weights (the ep-shardable bytes) and the per-layer
+    # dispatch buffer the all-to-all bridges move (top_k·capacity tokens)
+    expert_param_bytes = 0.0
+    moe_dispatch_bytes = 0.0
+    if n_moe:
+        expert_param_bytes = (n_moe * cfg.n_experts * E * cfg.d_ff_expert
+                              * 3 * param_dtype_bytes)
+        moe_dispatch_bytes = (T * cfg.top_k * cfg.capacity_factor
+                              * E * act_dtype_bytes)
+
     return WorkloadMeta(
         name=cfg.name, fwd_flops=float(flops), param_bytes=float(param_bytes),
         tp_shardable_param_bytes=float(tp_shardable),
         act_bytes_per_layer=float(act_per_layer), n_layers=max(L, 1),
         batch=batch, logits_bytes=float(logits_bytes),
-        head_param_bytes=float(E * V * param_dtype_bytes))
+        head_param_bytes=float(E * V * param_dtype_bytes),
+        n_experts=int(cfg.n_experts if n_moe else 0),
+        n_moe_layers=int(n_moe),
+        expert_param_bytes=float(expert_param_bytes),
+        moe_dispatch_bytes=float(moe_dispatch_bytes))

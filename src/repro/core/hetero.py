@@ -118,7 +118,8 @@ def strategy_fits_cluster(strat: StrategySpec, spec: ClusterSpec) -> bool:
     """
     if strat.devices != spec.n_devices:
         return False
-    unit = strat.tp * strat.pp if strat.pp == 1 else strat.dp * strat.tp
+    mp = strat.model_parallel
+    unit = mp * strat.pp if strat.pp == 1 else strat.dp * mp
     return all(g.n_devices % unit == 0 for g in spec.groups)
 
 
@@ -129,7 +130,7 @@ def stage_groups_for(spec: ClusterSpec, strat: StrategySpec) -> tuple:
     ``n_g / (dp·tp)`` consecutive stages (whole stages never straddle a
     hardware boundary).
     """
-    per_stage = strat.dp * strat.tp
+    per_stage = strat.dp * strat.model_parallel
     out = []
     for g in spec.groups:
         out.extend([g] * (g.n_devices // per_stage))
@@ -174,7 +175,7 @@ def balance_batch(meta: WorkloadMeta, strat: StrategySpec,
     uniform cluster gets an exactly even split.  Raises ``ValueError``
     when no assignment fits (the caller prunes such strategies).
     """
-    per_replica = strat.tp * strat.pp
+    per_replica = strat.model_parallel * strat.pp
     dp_g = [g.n_devices // per_replica for g in spec.groups]
     strat_g = [dataclasses.replace(strat, dp=max(d, 1)) for d in dp_g]
     caps = [_max_feasible_batch(meta, s, g)
@@ -347,7 +348,7 @@ def plan_placement(meta: WorkloadMeta, strat: StrategySpec,
     detail: dict = {"placement": "balanced" if balanced else "naive"}
     units = []
     if strat.pp == 1:
-        per_replica = strat.tp
+        per_replica = strat.model_parallel
         dp_g = [g.n_devices // per_replica for g in spec.groups]
 
         def price(shares):
@@ -363,7 +364,15 @@ def plan_placement(meta: WorkloadMeta, strat: StrategySpec,
             if len(spec.groups) > 1:
                 # hierarchical DP reduction: in-group ring (already in each
                 # unit's cost) + one cross-group ring on the bottleneck link
-                grad = meta.param_bytes * meta.grad_factor / strat.tp
+                # (nested ep: expert grads are ep-sharded → 1/ep the
+                # volume; dense grads stay tp-sharded as in the flat path)
+                if strat.ep > 1 and meta.expert_param_bytes:
+                    grad = ((meta.param_bytes - meta.expert_param_bytes)
+                            / strat.tp
+                            + meta.expert_param_bytes / strat.ep
+                            ) * meta.grad_factor
+                else:
+                    grad = meta.param_bytes * meta.grad_factor / strat.tp
                 ex = all_reduce_time(grad, len(spec.groups),
                                      spec.min_bw("data")) * (1.0 - overlap)
             return us, ex

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Sequence
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +38,47 @@ class TensorMeta:
 class StrategyAnnotation:
     kind: str                      # replica | split | stage | pipeline | auto
     options: dict = dataclasses.field(default_factory=dict)
+    depth: int = 0                 # nesting depth at which the scope opened
+                                   # (0 = outermost; recorded by strategies)
+
+
+# Parallelism-bearing annotation kinds, outermost-legal first.  "auto" is a
+# marker for the search, not a layout, and never participates in nesting
+# legality (repro.core.graph_opt.validate_nesting owns the rules).
+PARALLEL_KINDS = ("pipeline", "stage", "replica", "split")
+
+
+@dataclasses.dataclass(frozen=True)
+class Bridge:
+    """Collective glue inserted at a strategy boundary (Whale §4).
+
+    The forward collective ``kind`` and its autodiff transpose ``bwd_kind``
+    ride mesh-axis family ``axis``; ``bytes`` is the forward payload (the
+    source subgraph's boundary activations).  Taxonomy (DESIGN.md §6):
+
+    - ``identity``        same layout on both sides — no comm
+    - ``all_gather``      replicate → split edge (fwd); transpose is
+      ``reduce_scatter``
+    - ``reduce_scatter``  split → replicate edge (partial-sum combine +
+      batch re-scatter); transpose is ``all_gather``
+    - ``all_to_all``      expert-split boundary (MoE dispatch/combine) —
+      self-transpose
+    - ``p2p``             pipeline stage boundary — self-transpose
+    """
+    kind: str
+    bwd_kind: str
+    axis: str
+    bytes: int = 0
+    reason: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """A directed dataflow edge between two named subgraphs, carrying the
+    bridge the graph optimizer inserted for their layout mismatch."""
+    src: str
+    dst: str
+    bridge: Bridge
 
 
 @dataclasses.dataclass
@@ -63,14 +104,47 @@ class Subgraph:
     def strategy_kinds(self) -> tuple:
         return tuple(s.kind for s in self.strategy)
 
+    def parallel_kinds(self) -> tuple:
+        """Layout-bearing annotation kinds, outer→inner (drops ``auto``)."""
+        return tuple(s.kind for s in self.strategy if s.kind in PARALLEL_KINDS)
+
+    @property
+    def nesting_depth(self) -> int:
+        """How many parallelism scopes enclose this subgraph (the paper's
+        nested-hybrid depth: replica{split} = 2, pipeline{replica{split}},
+        counted per layout scope — stage boundaries included)."""
+        return len(self.parallel_kinds())
+
+    def stage_index(self) -> int | None:
+        for s in self.strategy:
+            if s.kind == "stage":
+                return s.options.get("index")
+        return None
+
+    def split_options(self) -> dict | None:
+        for s in reversed(self.strategy):     # innermost split wins
+            if s.kind == "split":
+                return s.options
+        return None
+
 
 @dataclasses.dataclass
 class TaskGraph:
     nodes: list = dataclasses.field(default_factory=list)
+    # dataflow edges + their inserted bridges, populated by the graph
+    # optimizer (repro.core.graph_opt.insert_bridges)
+    edges: list = dataclasses.field(default_factory=list)
 
     def add(self, sg: Subgraph) -> Subgraph:
         self.nodes.append(sg)
         return sg
+
+    def add_edge(self, edge: Edge) -> Edge:
+        self.edges.append(edge)
+        return edge
+
+    def edges_into(self, name: str) -> list:
+        return [e for e in self.edges if e.dst == name]
 
     def by_name(self, name: str) -> Subgraph:
         for n in self.nodes:

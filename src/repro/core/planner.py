@@ -36,7 +36,6 @@ produces a plan byte-identical to the spec-less path (regression-guarded).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable
 
 import jax
@@ -81,7 +80,7 @@ def mesh_for_strategy(strat: StrategySpec, *, devices=None,
         names.append("stage")
     shape.append(strat.dp // pods if pods > 1 else strat.dp)
     names.append("data")
-    shape.append(strat.tp)
+    shape.append(strat.model_parallel)   # tp and nested ep share the axis
     names.append("model")
     return jax.make_mesh(tuple(shape), tuple(names), devices=devices)
 
@@ -101,6 +100,7 @@ def strategy_from_taskgraph(cluster: Cluster) -> StrategySpec:
     kinds = set()
     micro = 1
     n_stages = 0
+    dense_split = expert_split = False
     for sg in (tg.nodes if tg else []):
         for ann in sg.strategy:
             kinds.add(ann.kind)
@@ -108,14 +108,21 @@ def strategy_from_taskgraph(cluster: Cluster) -> StrategySpec:
                 micro = max(micro, ann.options.get("micro_batch", 1))
             if ann.kind == "stage":
                 n_stages = max(n_stages, ann.options.get("index", 0) + 1)
+            if ann.kind == "split":
+                if ann.options.get("experts"):
+                    expert_split = True
+                else:
+                    dense_split = True
     dp = 1
     for a in ("pod", "data"):
         if a in mesh.shape:
             dp *= mesh.shape[a]
-    tp = mesh.shape.get("model", 1) if "split" in kinds else 1
+    model_ax = mesh.shape.get("model", 1)
+    tp = model_ax if dense_split else 1
+    ep = model_ax if expert_split else 1
     pp = mesh.shape.get("stage", 1) if kinds & {"stage", "pipeline"} else 1
-    return StrategySpec(dp=dp, tp=tp, pp=pp, micro_batches=micro,
-                        vocab_split="split" in kinds)
+    return StrategySpec(dp=dp, tp=tp, pp=pp, ep=ep, micro_batches=micro,
+                        vocab_split=dense_split)
 
 
 # ---------------------------------------------------------------------------

@@ -180,7 +180,8 @@ def tree_shardings(axes_tree, shapes_tree, rules: ShardingRules):
 
 def hybrid_rules(mesh: Mesh, *, fsdp: bool = True, data_axes=("pod", "data"),
                  model_axis: str = "model",
-                 context_parallel: bool = False) -> ShardingRules:
+                 context_parallel: bool = False,
+                 expert_axis: str | None = None) -> ShardingRules:
     """Whale Case-2 style hybrid: replica over data axes × operator split over model.
 
     - batch           → all data axes (pod-major)
@@ -193,8 +194,16 @@ def hybrid_rules(mesh: Mesh, *, fsdp: bool = True, data_axes=("pod", "data"),
       axis (gemma: 8 heads, qwen2-vl: 12 heads on 16 shards) head-sharding
       prunes and attention would otherwise replicate 16× — sharding q-seq
       restores the 1/16 work split (KV stays replicated, MQA-style CP).
+    - expert_axis → a dedicated *expert-parallel* mesh axis (the nested
+      ``replica{split[experts]}`` hybrid of graph_opt): the `experts`
+      Multi-Dimension shards over it first, ahead of the model axis, so a
+      mesh carrying an ``expert`` axis places whole experts per shard and
+      the graph optimizer's all-to-all bridges carry the dispatch.  The
+      explicit shard_map execution path is ``models.moe.moe_block_ep``.
     """
     data_axes = tuple(a for a in data_axes if a in mesh.shape)
+    if expert_axis is None and "expert" in mesh.shape:
+        expert_axis = "expert"
     rules = {
         "batch": data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None),
         # NOTE: a full-sequence-parallel variant ("seq" → model axis, the
@@ -209,7 +218,9 @@ def hybrid_rules(mesh: Mesh, *, fsdp: bool = True, data_axes=("pod", "data"),
         "kv_heads": model_axis,
         "head_dim": None,
         "mlp": model_axis,
-        "experts": model_axis,
+        "experts": ((expert_axis, model_axis)
+                    if expert_axis and expert_axis in mesh.shape
+                    else model_axis),
         # fallback: when `experts` prunes (E ∤ model axis, e.g. grok-1's 8
         # experts on 16 shards) the within-expert d_ff takes the model axis
         # instead (expert tensor parallelism).  spec_for's first-come-wins

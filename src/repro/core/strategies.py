@@ -20,7 +20,6 @@ see DESIGN.md §5).
 """
 from __future__ import annotations
 
-import contextlib
 import functools
 import threading
 
@@ -46,7 +45,15 @@ class _Scope:
         self.options = options
 
     def __enter__(self):
-        _stack().append(StrategyAnnotation(self.kind, dict(self.options)))
+        # loud nesting errors at the offending `with` line: graph_opt owns
+        # the legality rules (split innermost, stage needs pipeline, no
+        # self-nesting, parallel scopes need an active cluster)
+        from repro.core.graph_opt import validate_nesting
+        stack = _stack()
+        validate_nesting([a.kind for a in stack], entering=self.kind,
+                         in_cluster=Cluster.current() is not None)
+        stack.append(StrategyAnnotation(self.kind, dict(self.options),
+                                        depth=len(stack)))
         return self
 
     def __exit__(self, *exc):
@@ -60,11 +67,18 @@ class replica(_Scope):
 
 
 class split(_Scope):
-    """Operator sharding along `dim` of the subgraph output (paper Fig 4)."""
+    """Operator sharding along `dim` of the subgraph output (paper Fig 4).
+
+    ``experts=True`` marks the split as *expert parallelism* over the MoE
+    ``experts`` dimension — nested inside ``replica`` this is the paper's
+    ``replicate{split}`` M6 hybrid, lowered by :mod:`repro.core.graph_opt`
+    with all-to-all dispatch/combine bridges instead of the
+    all-gather/reduce-scatter of a tensor split.
+    """
     kind = "split"
 
-    def __init__(self, dim: int = -1):
-        super().__init__(dim=dim)
+    def __init__(self, dim: int = -1, experts: bool = False):
+        super().__init__(dim=dim, experts=experts)
 
 
 class stage(_Scope):
@@ -149,10 +163,15 @@ def sub(name: str, fn):
                       inputs=data_meta, outputs=outputs, flops=flops,
                       params=params_meta)
         kinds = sg.strategy_kinds()
+        split_opts = sg.split_options() or {}
+        expert_split = bool(split_opts.get("experts"))
         mesh = cl.mesh
         if "stage" in kinds:
             idx = next(a.options["index"] for a in anns if a.kind == "stage")
             sg.vdevice = cl.stage_vd(idx)
+        elif "split" in kinds and "replica" in kinds:
+            # nested replica{split}: the subgraph spans data AND model axes
+            sg.vdevice = cl.hybrid_vd()
         elif "split" in kinds:
             sg.vdevice = cl.split_vd()
         elif "replica" in kinds:
@@ -160,7 +179,7 @@ def sub(name: str, fn):
         cl.taskgraph.add(sg)
 
         out = fn(*args, **kwargs)
-        if "split" in kinds:
+        if "split" in kinds and not expert_split:
             dim = next(a.options["dim"] for a in anns if a.kind == "split")
             ax = _model_axis(mesh)
             da = _data_axes(mesh)
@@ -175,7 +194,10 @@ def sub(name: str, fn):
                 return P(*parts)
 
             out = _constrain_tree(out, spec, mesh)
-        elif "replica" in kinds:
+        elif "replica" in kinds or expert_split:
+            # expert splits combine back to a batch-sharded layout — the
+            # all-to-all dispatch/combine lives inside the subgraph (see
+            # models/moe.py moe_block_ep); the boundary layout is replica's
             da = _data_axes(mesh)
 
             def spec(x):

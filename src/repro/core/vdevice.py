@@ -20,7 +20,6 @@ land on, and the planner/auto layers use the spec to balance work.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 import jax
 import numpy as np
@@ -117,6 +116,14 @@ class Cluster:
     def split_vd(self) -> VirtualDevice:
         ax = "model" if "model" in self.mesh.shape else self.mesh.axis_names[-1]
         return VirtualDevice("split", (ax,), hardware=self._uniform_hw())
+
+    def hybrid_vd(self) -> VirtualDevice:
+        """Nested replica{split}: one VD spanning the data AND model axes
+        (the subgraph is replicated over data, sharded over model)."""
+        axes = tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+        ax = "model" if "model" in self.mesh.shape else self.mesh.axis_names[-1]
+        return VirtualDevice("hybrid", axes + (ax,),
+                             hardware=self._uniform_hw())
 
     def stage_vd(self, index: int, n_stages: int | None = None) -> VirtualDevice:
         ax = "stage" if "stage" in self.mesh.shape else self.mesh.axis_names[0]

@@ -19,7 +19,6 @@ byte-level codec (examples use the synthetic source).
 from __future__ import annotations
 
 import dataclasses
-import math
 import os
 from typing import Iterator
 

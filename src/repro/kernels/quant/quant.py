@@ -13,7 +13,6 @@ a 1 MiB VMEM resident with 4 live buffers (in, out, scale, iota-free).
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

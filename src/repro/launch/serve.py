@@ -47,7 +47,6 @@ class Server:
         self.B = batch_slots
         self.max_len = max_len
         self.eos = eos_id
-        cfg = model.cfg
         with self.mesh:
             self.serve_step = plan.jit_serve_step(batch_slots, max_len,
                                                   donate=False)

@@ -17,11 +17,9 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_NAMES, get_config

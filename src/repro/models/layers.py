@@ -21,7 +21,6 @@ Logical axis vocabulary
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Callable
 

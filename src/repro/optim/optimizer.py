@@ -14,7 +14,6 @@ for grok-scale models on 16 GB HBM parts, see configs/grok_1_314b.py).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Callable
 
 import jax

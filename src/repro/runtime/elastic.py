@@ -26,7 +26,7 @@ from typing import Any
 import jax
 
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.core.planner import ExecutionPlan, compile_plan
+from repro.core.planner import compile_plan
 from repro.core.cost_model import ClusterSpec, StrategySpec, WorkloadMeta
 
 

@@ -1,19 +1,18 @@
 """Whale core: IR capture, strategy scopes, sharding rules, cost model, auto."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 import repro as wh
-from repro.core.auto import divisors, enumerate_strategies, search
+from repro.core.auto import enumerate_strategies, search
 from repro.core.cost_model import (StrategySpec, TPU_V5E, V100_PAPER,
                                    WorkloadMeta, all_gather_time,
                                    all_reduce_time, lm_workload_meta,
                                    step_cost)
 from repro.core.ir import TaskGraph, TensorMeta, capture_meta, jaxpr_flops
-from repro.core.sharding import ShardingRules, hybrid_rules
+from repro.core.sharding import hybrid_rules
 
 
 # ---------------------------------------------------------------------------

@@ -134,7 +134,6 @@ def test_ssd_chunked_jnp_path_matches_oracle():
 
 def test_ssd_decode_matches_scan():
     """O(1)-state decode steps reproduce the chunked scan token-by-token."""
-    import dataclasses
     from repro.models import mamba2
     cfg = mamba2.SSDCfg(d_model=32, n_heads=2, headdim=32, d_state=16,
                         d_conv=4, chunk=16)

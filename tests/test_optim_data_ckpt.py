@@ -8,9 +8,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.ckpt.checkpoint import CheckpointManager
-from repro.data.pipeline import DataCfg, PipelineState, TokenPipeline
-from repro.optim.grad_compress import (dequantize_int8, init_error_tree,
-                                       quantize_int8)
+from repro.data.pipeline import DataCfg, TokenPipeline
+from repro.optim.grad_compress import dequantize_int8, quantize_int8
 from repro.optim.optimizer import (Schedule, adafactor, adamw,
                                    clip_by_global_norm, global_norm)
 from repro.runtime.fault_tolerance import FaultTolerantLoop
