@@ -1,24 +1,30 @@
 """CI benchmark-regression gate: run the analytic benchmarks, record the
 headline numbers, fail on regression below the recorded floors.
 
-    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR4.json]
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR5.json]
 
-The analytic (cost-model) benchmarks are deterministic — pure arithmetic
-over hardware tables, no execution, no timing noise — so they can be gated
-hard in CI.  This script runs fig2 (schedule grid), fig7 (heterogeneous
-balancing), and fig9 (nested DP×EP MoE), writes every headline metric to a
-JSON artifact, and exits non-zero if any gated metric falls below its
-floor:
+The analytic (cost-model / simulated-clock) benchmarks are deterministic —
+pure arithmetic over hardware tables, no execution, no timing noise — so
+they can be gated hard in CI.  This script runs fig2 (schedule grid), fig7
+(heterogeneous balancing), fig9 (nested DP×EP MoE), and fig_elastic
+(self-healing straggler eviction), writes every headline metric to a JSON
+artifact, and exits non-zero if any gated metric falls below its floor:
 
     fig7_hetero_speedup      >= 2.5   (aware vs naive on mixed V100/P100)
     fig2_uneven_speedup      >= 2.5   (uneven vs even stages, mixed cluster)
     fig9_nested_vs_flat      >  1.0   (nested replica{split[experts]} vs
                                        flat DP on the M6-like MoE)
+    fig_elastic_selfheal_vs_naive >= 1.5  (evict+rebalance vs riding out
+                                           the straggler, worst scenario)
+    fig_elastic_recovery_ratio >= 0.9     (post-heal throughput lands on
+                                           the rebalanced plan's cost-model
+                                           prediction; also gated <= 1.1)
 
-Floors are deliberately below the current values (2.77 / 2.66 / 1.98) so
-legitimate cost-model refinements have headroom, while a change that
-destroys a headline win (the balancer, the schedule memory model, the ep
-pricing) fails the ``bench`` CI job loudly.
+Floors are deliberately below the current values (2.77 / 2.66 / 1.98 /
+2.20 / 0.98) so legitimate cost-model refinements have headroom, while a
+change that destroys a headline win (the balancer, the schedule memory
+model, the ep pricing, the eviction loop) fails the ``bench`` CI job
+loudly.
 """
 from __future__ import annotations
 
@@ -30,6 +36,8 @@ FLOORS = {
     "fig7_hetero_speedup": 2.5,
     "fig2_uneven_speedup": 2.5,
     "fig9_nested_vs_flat_speedup": 1.0,
+    "fig_elastic_selfheal_vs_naive": 1.5,
+    "fig_elastic_recovery_ratio": 0.9,
 }
 
 
@@ -64,6 +72,18 @@ def collect() -> dict:
     out["fig9_nested_vs_flat_speedup"] = f9["nested_vs_flat_speedup"]
     out["fig9_flat_oom_on_32e"] = f9["flat_oom_on_32e"]
     out["fig9_nested_fits_32e"] = f9["nested_fits_32e"]
+
+    # ---- fig_elastic: self-healing eviction loop (simulated clock);
+    # strict=False so a regression is recorded in the artifact and
+    # reported via gate() rather than aborting collect() ----
+    import benchmarks.fig_elastic as fig_elastic
+    fe = fig_elastic.main(csv=False, strict=False)
+    out["fig_elastic_selfheal_vs_naive"] = fe["selfheal_vs_naive_speedup"]
+    out["fig_elastic_recovery_ratio"] = fe["recovery_ratio"]
+    out["fig_elastic_recovery_ratio_max"] = fe["recovery_ratio_max"]
+    out["fig_elastic_per_scenario"] = {
+        name: {k: v for k, v in r.items() if k != "scenario"}
+        for name, r in fe["per_scenario"].items()}
     return out
 
 
@@ -82,12 +102,19 @@ def gate(metrics: dict) -> list:
     if not metrics.get("fig9_nested_fits_32e"):
         failures.append("nested DP×EP no longer fits the 32-expert M6 "
                         "config")
+    # ceiling gates the MAX across scenarios (the floor gates the min via
+    # FLOORS) — a single out-of-range scenario must fail the gate
+    if metrics.get("fig_elastic_recovery_ratio_max", 1.0) > 1.1:
+        failures.append("post-heal throughput exceeds the cost-model "
+                        "prediction by >10% — the simulated clock and the "
+                        "search disagree (fig_elastic_recovery_ratio_max "
+                        "> 1.1)")
     return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR4.json")
+    ap.add_argument("--out", default="BENCH_PR5.json")
     args = ap.parse_args(argv)
     metrics = collect()
     with open(args.out, "w") as f:

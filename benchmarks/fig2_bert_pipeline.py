@@ -171,8 +171,8 @@ def measured_rows(steps: int = 4):
     # pipeline (2 stages) × DP
     mesh2 = jax.make_mesh((2, n // 2, 1), ("stage", "data", "model"))
     rules = hybrid_rules(mesh2)
-    pstep = pipe.make_gpipe_train_step(model, mesh2, rules, opt,
-                                       micro_batches=4, donate=False)
+    pstep = pipe.make_pipeline_train_step(model, mesh2, rules, opt,
+                                          micro_batches=4, donate=False)
     pspecs = pipe.staged_specs(rules, model.axes(), model.param_shapes())
     psh = jax.tree.map(lambda s: jax.NamedSharding(mesh2, s), pspecs,
                        is_leaf=lambda t: isinstance(

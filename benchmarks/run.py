@@ -9,11 +9,12 @@ Sections:
   fig5      100k-class DP vs DP+split hybrid             (paper Fig. 5)
   fig7      hardware-aware vs naive split on mixed GPUs  (paper §5)
   fig9      M6 recipe: nested replica{split[experts]} vs flat DP (paper §4)
+  elastic   self-healing straggler eviction vs naive        (paper §5)
   kernels   Pallas kernel numerics vs oracle + VMEM budget
   roofline  per-(arch × shape × mesh) table from the dry-run JSONL
 
 The CI regression gate over the analytic sections is benchmarks/bench_ci.py
-(writes BENCH_PR4.json, fails below the recorded floors).
+(writes BENCH_PR5.json, fails below the recorded floors).
 """
 from __future__ import annotations
 
@@ -59,6 +60,11 @@ def main() -> None:
     print("== fig9: nested DP×EP MoE — the M6 recipe (paper §4) ==")
     import benchmarks.fig9_m6_moe as fig9
     fig9.main()
+
+    print("=" * 72)
+    print("== elastic: self-healing eviction vs naive straggler (§5) ==")
+    import benchmarks.fig_elastic as fig_elastic
+    fig_elastic.main()
 
     print("=" * 72)
     print("== kernels: Pallas vs oracle ==")

@@ -50,8 +50,8 @@ mesh3 = jax.make_mesh((2, 2, 2), ("stage", "data", "model"))
 rules = wh.hybrid_rules(mesh3)
 plan3 = compile_plan(model, mesh3)
 with mesh3:
-    pstep = pipe.make_gpipe_train_step(model, mesh3, rules, opt, micro_batches=4,
-                                       donate=False)
+    pstep = pipe.make_pipeline_train_step(model, mesh3, rules, opt,
+                                          micro_batches=4, donate=False)
     # params sharded for pipeline
     pspecs = pipe.staged_specs(rules, model.axes(), model.param_shapes())
     psh = jax.tree.map(lambda s: jax.NamedSharding(mesh3, s), pspecs,
@@ -67,7 +67,7 @@ assert np.isfinite(float(loss3))
 with mesh:
     l_ref, _ = plan.jit_loss(batch)(params, batch)
 # ref loss includes z_loss etc; compare
-lfn, _ = pipe.make_gpipe_loss(model, mesh3, rules, micro_batches=4)
+lfn, _ = pipe.make_pipeline_loss(model, mesh3, rules, micro_batches=4)
 with mesh3:
     l_pipe = jax.jit(lfn)(params3, tokens)
 print("ref loss:", float(l_ref), "pipe loss:", float(l_pipe))

@@ -58,6 +58,12 @@ fig2.print_schedule_grid(fig2.schedule_grid_rows())
 # bridge insertion on a traced replica{split[experts]} nest
 import benchmarks.fig9_m6_moe as fig9
 fig9.main()
+
+# self-healing smoke: the fig_elastic eviction loop (straggler detected,
+# evicted, rebalanced plan recovers to the cost-model prediction) with its
+# built-in assertions
+import benchmarks.fig_elastic as fig_elastic
+fig_elastic.main()
 import repro as wh
 with wh.cluster(mesh_shape=(1, 1), axis_names=("data", "model")) as _cl:
     with wh.replica():

@@ -134,6 +134,20 @@ class CheckpointManager:
             raise ValueError(
                 f"checkpoint has {len(manifest['paths'])} leaves, "
                 f"target wants {len(leaves)}")
+        # leaf *identity* must match too: an elastic re-plan that changed
+        # the tree structure (different optimizer, pipelined layout) would
+        # otherwise silently restore arrays into the wrong leaves whenever
+        # shapes happen to coincide
+        tgt_paths = _leaf_paths(target)
+        mismatch = [(a, b) for a, b in zip(manifest["paths"], tgt_paths)
+                    if a != b]
+        if mismatch:
+            a, b = mismatch[0]
+            raise ValueError(
+                f"checkpoint tree does not match restore target "
+                f"({len(mismatch)} leaves differ; first: ckpt {a!r} vs "
+                f"target {b!r}) — the new plan's parameter layout is "
+                f"incompatible with this checkpoint")
         sh_leaves = (treedef.flatten_up_to(shardings)
                      if shardings is not None else [None] * len(leaves))
         out = []

@@ -123,6 +123,38 @@ def strategy_fits_cluster(strat: StrategySpec, spec: ClusterSpec) -> bool:
     return all(g.n_devices % unit == 0 for g in spec.groups)
 
 
+def shrink_cluster(spec: ClusterSpec, removed: dict) -> ClusterSpec:
+    """The surviving cluster after eviction: ``removed`` maps group name →
+    number of devices leaving that group (a flagged host's devices).
+
+    This is the group-keyed counterpart of
+    ``runtime.elastic.HostTopology.without`` for deployments that track a
+    plain :class:`ClusterSpec` (real multi-process fleets keyed by
+    ``process_index``) rather than the simulated host topology.
+
+    Groups that lose all their devices are dropped; removing more devices
+    than a group has, or naming an unknown group, is a loud error — the
+    eviction machinery must never silently shrink the wrong pool.
+    """
+    by_name = {g.name: g for g in spec.groups}
+    for name, k in removed.items():
+        if name not in by_name:
+            raise ValueError(f"unknown device group {name!r}; have "
+                             f"{sorted(by_name)}")
+        if k > by_name[name].n_devices:
+            raise ValueError(
+                f"cannot remove {k} devices from group {name!r} "
+                f"({by_name[name].n_devices} present)")
+    groups = []
+    for g in spec.groups:
+        n = g.n_devices - removed.get(g.name, 0)
+        if n > 0:
+            groups.append(dataclasses.replace(g, n_devices=n))
+    if not groups:
+        raise ValueError("eviction would remove the whole cluster")
+    return ClusterSpec(groups=tuple(groups))
+
+
 def stage_groups_for(spec: ClusterSpec, strat: StrategySpec) -> tuple:
     """Map each of the ``pp`` stages to its hosting DeviceGroup.
 

@@ -379,17 +379,28 @@ def make_pipeline_train_step(model: Model, mesh: Mesh, rules: ShardingRules,
                    donate_argnums=(0, 1) if donate else ())
 
 
+def _warn_gpipe_alias(name: str) -> None:
+    import warnings
+    warnings.warn(
+        f"{name} is a deprecated even-stage alias; use the "
+        f"make_pipeline_* API (uneven stage_layers + schedule choice)",
+        DeprecationWarning, stacklevel=3)
+
+
 def make_gpipe_loss(model: Model, mesh: Mesh, rules: ShardingRules, *,
                     micro_batches: int):
-    """Even-stage GPipe alias of :func:`make_pipeline_loss` (the pre-
-    schedule-subsystem API; the layer stack must divide evenly)."""
+    """Deprecated even-stage GPipe alias of :func:`make_pipeline_loss`
+    (the pre-schedule-subsystem API; the layer stack must divide evenly)."""
+    _warn_gpipe_alias("make_gpipe_loss")
     return make_pipeline_loss(model, mesh, rules,
                               micro_batches=micro_batches)
 
 
 def make_gpipe_train_step(model: Model, mesh: Mesh, rules: ShardingRules,
                           optimizer, *, micro_batches: int, donate=True):
-    """Even-stage GPipe alias of :func:`make_pipeline_train_step`."""
+    """Deprecated even-stage GPipe alias of
+    :func:`make_pipeline_train_step`."""
+    _warn_gpipe_alias("make_gpipe_train_step")
     return make_pipeline_train_step(model, mesh, rules, optimizer,
                                     micro_batches=micro_batches,
                                     donate=donate)

@@ -9,8 +9,13 @@ Production constraints this implements (DESIGN.md §6):
 - **Exactly-once accounting**: the pipeline state is a (epoch, step,
   rng-counter) triple, checkpointed alongside the model so restarts resume
   mid-epoch without repeating or skipping samples.
-- **Deterministic**: sample content is a pure function of (seed, epoch,
-  index) — restart-stable regardless of worker count.
+- **Deterministic & host-count invariant**: sample content is a pure
+  function of (seed, epoch, step) at *global-batch* granularity — each
+  host materialises the global batch's token draw and slices its share,
+  so an elastic re-mesh that changes the host count (straggler eviction,
+  pool join) resumes the identical global sample stream.  ``reshard``
+  re-slices a live pipeline onto a new (host_id, n_hosts) without
+  touching its position.
 
 Sources: synthetic LM tokens (zipf-ish unigram draw — keeps the loss
 non-degenerate), a memory-mapped binary token file, or a text corpus via a
@@ -72,14 +77,18 @@ class TokenPipeline:
 
     # --- deterministic content ---
     def _synthetic(self, epoch: int, step: int) -> np.ndarray:
-        rng = np.random.default_rng(
-            (self.state.seed * 1_000_003 + epoch) * 1_000_003
-            + step * self.n_hosts + self.host_id)
+        # content is seeded per GLOBAL batch row, so the stream survives an
+        # elastic host-count change byte-identically (seeding per
+        # (step, host) would re-deal every sample on re-mesh) while each
+        # host only draws its own O(local_batch) rows
         B, S, V = self.local_batch, self.cfg.seq_len, self.cfg.vocab
+        lo = self.host_id * B
+        u = np.stack([
+            np.random.default_rng(
+                (self.state.seed, epoch, step, row)).random(S)
+            for row in range(lo, lo + B)])
         # zipf-ish unigram over the vocab: learnable structure, finite loss
-        u = rng.random((B, S))
-        toks = np.minimum((V ** u - 1.0), V - 1).astype(np.int32)
-        return toks
+        return np.minimum((V ** u - 1.0), V - 1).astype(np.int32)
 
     def _from_file(self, epoch: int, step: int) -> np.ndarray:
         B, S = self.local_batch, self.cfg.seq_len
@@ -107,6 +116,18 @@ class TokenPipeline:
     def __iter__(self) -> Iterator[dict]:
         while True:
             yield self.next_batch()
+
+    # --- elastic re-sharding ---
+    def reshard(self, *, host_id: int, n_hosts: int) -> "TokenPipeline":
+        """The same stream re-sliced for a new host layout (same position).
+
+        After straggler eviction the surviving hosts re-divide the
+        *unchanged* global batch; because content is drawn at global
+        granularity, the concatenation of all hosts' shards is identical
+        before and after — exactly-once holds across the re-mesh.
+        """
+        return TokenPipeline(self.cfg, host_id=host_id, n_hosts=n_hosts,
+                             state=PipelineState(**self.state.to_dict()))
 
     # --- checkpoint integration ---
     def state_dict(self) -> dict:

@@ -65,6 +65,9 @@ class Server:
 
     # --- admission: run prefill for one request into one slot ---
     def admit(self, params, req: Request, slot: int) -> None:
+        """Prefill ``req`` into ``slot``.  A request that finishes at
+        admission (EOS from prefill, or a one-token budget) is marked
+        ``done`` and never occupies the slot — the caller collects it."""
         prompt = jnp.asarray(req.prompt)[None]           # (1, S)
         with self.mesh:
             logits, st = self.model.prefill(
@@ -72,6 +75,9 @@ class Server:
                 gen_budget=self.max_len - prompt.shape[1])
         tok = int(jnp.argmax(logits[0, :self.model.cfg.vocab]))
         req.out_tokens.append(tok)
+        if tok == self.eos or len(req.out_tokens) >= req.max_new:
+            req.done = True
+            return
         # batch=1 prefill state → write into slot via dynamic_update_slice,
         # then re-place on the serving shardings (admission is off the
         # decode hot path)
@@ -81,13 +87,23 @@ class Server:
         self.tokens = self.tokens.at[slot].set(tok)
         self.slots[slot] = req
 
-    def step(self, params) -> None:
+    def step(self, params) -> list:
+        """Advance every active slot one token; returns the requests that
+        finished this step.
+
+        Finished requests must be *returned*, not just freed: the slot is
+        recycled in the same pass (``self.slots[b] = None``), so a caller
+        scanning ``server.slots`` afterwards can never observe a done
+        request — the pre-fix driver collected exactly that way and its
+        ``done`` list stayed empty forever.
+        """
         with self.mesh:
             logits, self.state = self.serve_step(params, self.tokens,
                                                  self.state)
         nxt = jnp.argmax(logits[:, :self.model.cfg.vocab], axis=-1)
         self.tokens = nxt.astype(jnp.int32)
         self.steps += 1
+        finished = []
         for b, req in enumerate(self.slots):
             if req is None or req.done:
                 continue
@@ -95,7 +111,9 @@ class Server:
             req.out_tokens.append(tok)
             if tok == self.eos or len(req.out_tokens) >= req.max_new:
                 req.done = True
-                self.slots[b] = None
+                self.slots[b] = None          # recycle the slot …
+                finished.append(req)          # … but hand the request back
+        return finished
 
     def free_slot(self) -> int | None:
         for b, s in enumerate(self.slots):
@@ -169,15 +187,22 @@ def main(argv=None) -> dict:
     done: list = []
     while pending or any(s is not None for s in server.slots):
         while pending and (slot := server.free_slot()) is not None:
-            server.admit(params, pending.pop(0), slot)
-        server.step(params)
-        done.extend(r for r in server.slots if r and r.done)
+            req = pending.pop(0)
+            server.admit(params, req, slot)
+            if req.done:                      # finished at admission
+                done.append(req)
+        done.extend(server.step(params))
     dt = time.time() - t0
-    total_toks = args.requests * args.gen
-    print(f"[serve] {args.requests} requests × {args.gen} tokens in "
-          f"{dt:.2f}s ({total_toks / dt:.1f} tok/s, "
+    if len(done) != args.requests:
+        raise SystemExit(
+            f"[serve] BUG: {len(done)}/{args.requests} requests completed "
+            f"— finished requests were dropped")
+    total_toks = sum(len(r.out_tokens) for r in done)
+    print(f"[serve] {args.requests} requests completed, {total_toks} tokens "
+          f"in {dt:.2f}s ({total_toks / dt:.1f} tok/s, "
           f"{server.steps} decode steps)")
-    return {"steps": server.steps, "seconds": dt}
+    return {"steps": server.steps, "seconds": dt,
+            "completed": len(done), "tokens": total_toks}
 
 
 if __name__ == "__main__":

@@ -1,22 +1,39 @@
-"""Fault-tolerant training driver.
+"""Fault-tolerant, self-healing training driver.
 
 Composes the whole stack: config → model → Whale plan (manual or
 auto-parallel) → data pipeline → jitted train step → fault-tolerant loop
 with async checkpoints, straggler monitoring, and auto-resume.
+
+:class:`TrainController` closes Whale's resource-adaptability loop
+(DESIGN.md §7): per-host step times feed a
+:class:`~repro.runtime.straggler.HostStragglerAggregator`; a sustained
+straggler is **evicted** (`shrink_devices`), the job **rebalances** onto
+the surviving hardware mix (`ElasticContext.rebalance` — the hetero-aware
+search picks the new strategy and placement), the committed checkpoint
+restores into the new plan, the data pipeline resumes exactly-once, and
+training continues.
 
 Usage (CPU sanity run)::
 
     python -m repro.launch.train --arch tinyllama-1.1b --smoke \
         --steps 50 --batch 8 --seq 128 --mesh 1x1
 
+Self-healing run with an injected straggler (4 virtual devices = 2
+simulated hosts; host 1 goes 4× slower at step 6 and is evicted)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+    python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+        --steps 20 --batch 8 --seq 64 --hosts 2 --inject-slow 1:6:4
+
 Multi-host TPU: every host runs the same command; ``--distributed`` calls
 ``jax.distributed.initialize()`` first (single-process here, exercised via
-the 512-virtual-device dry-run instead).
+the simulated :class:`~repro.runtime.elastic.HostTopology` instead).
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +42,15 @@ from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.auto import auto_parallel
 from repro.core.cost_model import StrategySpec, TPU_V5E, lm_workload_meta
-from repro.core.planner import compile_plan
+from repro.core.planner import compile_plan, mesh_for_strategy
 from repro.data.pipeline import DataCfg, TokenPipeline
 from repro.optim.optimizer import Schedule, adamw, adafactor
+from repro.runtime.elastic import (ElasticContext, HostTopology,
+                                   plan_for_cluster)
 from repro.runtime.fault_tolerance import FaultTolerantLoop
-from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.faults import FaultInjector, SlowHost, CrashStep
+from repro.runtime.straggler import (HostStragglerAggregator,
+                                     StragglerMonitor)
 
 
 def parse_mesh(spec: str, *, stage: int = 1):
@@ -39,6 +60,279 @@ def parse_mesh(spec: str, *, stage: int = 1):
     if len(dims) == 2:
         return jax.make_mesh(dims, ("data", "model"))
     return jax.make_mesh(dims, ("pod", "data", "model"))
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    """Knobs for the self-healing loop (DESIGN.md §7)."""
+    topology: HostTopology
+    threshold: float = 2.0          # straggler flag at mean + k·std
+    patience: int = 3               # sustained outlier steps before flagging
+    warmup: int = 5                 # per-monitor warmup (compile steps)
+    min_hosts: int = 1              # never evict below this
+    max_rebalances: int = 2         # then ride out the degradation
+    overlap: float = 0.5            # comm/compute overlap for the search
+    search_kw: dict = dataclasses.field(
+        # stay in the checkpoint's non-pipelined parameter layout: a live
+        # re-plan into a padded pipeline layout would need a migration
+        default_factory=lambda: {"max_pp": 1})
+
+
+class TrainController:
+    """Self-healing elastic training: straggler → evict → rebalance → resume.
+
+    State machine (``.phase``)::
+
+        TRAINING ──straggler flagged──▶ DEGRADED ──stop+ckpt──▶ REBALANCING
+           ▲                                                        │
+           └────────── restore into the re-planned mesh ◀───────────┘
+        terminal: DONE (n_steps reached) | PREEMPTED (SIGTERM, final ckpt
+        committed — a relaunch auto-resumes) | FAILED (retry budget
+        exhausted and re-raise, after a final checkpoint)
+
+    One :class:`FaultTolerantLoop` segment runs per plan; per-host step
+    times (real, or synthesized by a
+    :class:`~repro.runtime.faults.FaultInjector` on the simulated
+    multi-host clock) feed the aggregator, and a sustained flag stops the
+    segment with a final synchronous checkpoint.  Eviction shrinks the
+    :class:`~repro.runtime.elastic.HostTopology`, the hetero-aware search
+    re-plans over the survivors' :class:`ClusterSpec`, and the committed
+    checkpoint restores into the new plan — data-pipeline position
+    included, so the global sample stream continues exactly-once.
+
+    Batches are fetched idempotently per step (a retried step replays the
+    *same* batch — the bounded-retry path cannot skip samples).
+    """
+
+    def __init__(self, model, cfg, optimizer, data: TokenPipeline,
+                 ckpt: CheckpointManager, *, elastic: ElasticConfig,
+                 batch: int, seq: int, save_every: int = 50,
+                 max_retries: int = 3, injector: FaultInjector | None = None,
+                 log_every: int = 10, verbose: bool = True):
+        self.model = model
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.data = data
+        self.ckpt = ckpt
+        self.elastic = elastic
+        self.topology = elastic.topology
+        self.meta = lm_workload_meta(cfg, batch=batch, seq=seq)
+        self.save_every = save_every
+        self.max_retries = max_retries
+        self.injector = injector
+        self.log_every = log_every
+        self.verbose = verbose
+        self.phase = "TRAINING"
+        self.events: list = []
+        self.losses: list = []
+        self.aggregator = HostStragglerAggregator(
+            n_hosts=len(self.topology.hosts),
+            threshold=elastic.threshold, patience=elastic.patience,
+            warmup=elastic.warmup)
+        self.aggregator.reset(self.topology.host_ids)
+        self._batch_step = -1
+        self._batch = None
+        self._data_state_before = None
+
+    # ------------------------------------------------------------- logging
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg)
+
+    def _event(self, kind: str, **kw) -> None:
+        self.events.append({"kind": kind, **kw})
+
+    # ------------------------------------------------------------ planning
+    def _plan_current(self):
+        """Search the surviving cluster and compile the plan + mesh."""
+        plan, cand = plan_for_cluster(
+            self.model, self.meta, self.topology.cluster_spec(),
+            devices=self.topology.devices(jax.devices()),
+            overlap=self.elastic.overlap, search_kw=self.elastic.search_kw)
+        return plan, float(cand.total)
+
+    def _build_step_fn(self, plan):
+        batch0 = {k: jnp.asarray(v) for k, v in self._peek_batch().items()}
+        with plan.mesh:
+            jfn = plan.jit_train_step(self.optimizer, batch0, donate=False)
+
+        def one_step(i, st):
+            if self.injector is not None:
+                self.injector.maybe_preempt(i)
+            batch = self._batch_for(i)
+            if self.injector is not None:
+                self.injector.maybe_fail(i)
+            with plan.mesh:
+                p, o, m = jfn(st["params"], st["opt"], batch,
+                              jnp.asarray(i))
+            self.losses.append(float(m["loss"]))
+            if i % self.log_every == 0:
+                self._log(f"  step {i:5d}  loss {self.losses[-1]:.4f}")
+            return {"params": p, "opt": o}
+
+        return one_step
+
+    # -------------------------------------------------- exactly-once data
+    def _peek_batch(self) -> dict:
+        """The next step's batch (cached, so the step replays it)."""
+        return self._batch_for(self._batch_step + 1)
+
+    def _batch_for(self, step: int) -> dict:
+        """Idempotent per-step batch: a retried step replays the same
+        samples instead of silently consuming the next draw."""
+        if step != self._batch_step:
+            self._data_state_before = self.data.state_dict()
+            raw = self.data.next_batch()
+            self._batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            self._batch_step = step
+        return self._batch
+
+    def _data_state_at(self, step: int) -> dict:
+        """The pipeline position with exactly ``step`` batches consumed —
+        what a checkpoint committed at ``step`` must record.  A save at
+        the *failed* step (retry budget exhausted) lands one batch behind
+        the cursor, so the pre-fetch snapshot is returned instead."""
+        consumed = self._batch_step + 1
+        if step == self._batch_step and self._data_state_before is not None:
+            return dict(self._data_state_before)
+        if step != consumed:
+            raise RuntimeError(
+                f"data pipeline out of sync: checkpoint at step {step} but "
+                f"{consumed} batches consumed")
+        return self.data.state_dict()
+
+    # ------------------------------------------------------------ the loop
+    def run(self, n_steps: int, seed: int = 0) -> dict:
+        plan, predicted = self._plan_current()
+        self._log(f"[elastic] initial plan: "
+                  f"{plan.strategy.describe()} on "
+                  f"{self.topology.n_devices} devices "
+                  f"(predicted {predicted*1e3:.1f} ms/step)")
+        with plan.mesh:
+            params = plan.init_params(jax.random.key(seed))
+            opt_state = jax.jit(self.optimizer.init)(params)
+        step = 0
+        resume = self.ckpt.restore_latest({"params": params,
+                                           "opt": opt_state})
+        if resume is not None:
+            step, tree, extra = resume
+            params, opt_state = tree["params"], tree["opt"]
+            if "data" in extra:
+                self.data.load_state_dict(extra["data"])
+                self._batch_step, self._batch = step - 1, None
+            self._log(f"[resume] from step {step}")
+        state = {"params": params, "opt": opt_state}
+
+        rebalances = 0
+        while step < n_steps:
+            pending: list = []
+            segment_start = step
+            loop = FaultTolerantLoop(self.ckpt, save_every=self.save_every,
+                                     max_retries=self.max_retries)
+
+            def on_step(i, st, dt, _loop=loop, _pending=pending,
+                        _start=segment_start):
+                if i == _start:
+                    return          # jit-compile step would poison warmup
+                hosts = self.topology.host_ids
+                if self.injector is not None:
+                    times = self.injector.host_times(i, base=dt, hosts=hosts)
+                else:
+                    # single-process: every host reports the global step
+                    # time; a real fleet reports per-host measurements
+                    times = {h: dt for h in hosts}
+                for h in self.aggregator.observe(times):
+                    self._event("flag", step=i, host=h, dt=times[h],
+                                mean=self.aggregator.monitors[h].mean
+                                if h in self.aggregator.monitors else None)
+                    self._log(f"[straggler] host {h} flagged at step {i} "
+                              f"(dt={times[h]:.3f}s)")
+                    survivors = len(self.topology.hosts) - len(_pending) - 1
+                    if survivors < self.elastic.min_hosts:
+                        self._log(f"[straggler] NOT evicting host {h}: "
+                                  f"{survivors} survivors < min_hosts="
+                                  f"{self.elastic.min_hosts}")
+                        continue
+                    if rebalances >= self.elastic.max_rebalances:
+                        self._log("[straggler] rebalance budget exhausted; "
+                                  "riding out the degradation")
+                        continue
+                    _pending.append(h)
+                if _pending:
+                    self.phase = "DEGRADED"
+                    _loop.request_stop()
+
+            step_fn = self._build_step_fn(plan)
+            try:
+                step, state = loop.run(
+                    state=state, step_fn=step_fn, n_steps=n_steps,
+                    start_step=step,
+                    extra_fn=lambda st, s: {"data": self._data_state_at(s)},
+                    on_step=on_step)
+            except Exception:
+                self.phase = "FAILED"
+                raise
+            if loop.preempted:
+                self.phase = "PREEMPTED"
+                self._event("preempted", step=step,
+                            pending_evictions=list(pending))
+                self._log(f"[preempt] SIGTERM at step {step}; final "
+                          f"checkpoint committed")
+                break
+            if not pending or step >= n_steps:
+                # n_steps reached — a flag raised on the very last step
+                # must not trigger a rebalance whose result is discarded
+                break
+            # ---- evict + rebalance + resume ----
+            self.phase = "REBALANCING"
+            for h in pending:
+                self.aggregator.evict(h)
+            self.topology = self.topology.without(set(pending))
+            spec = self.topology.cluster_spec()
+            self._event("evict", step=step, hosts=list(pending),
+                        surviving_devices=self.topology.n_devices)
+            self._log(f"[evict] hosts {pending} at step {step}; "
+                      f"rebalancing onto {self.topology.n_devices} devices")
+            ectx = ElasticContext(model=self.model, optimizer=self.optimizer)
+            t0 = time.monotonic()
+            step, plan, params, opt_state, extra = ectx.rebalance(
+                self.ckpt, spec, self.meta,
+                devices=self.topology.devices(jax.devices()),
+                overlap=self.elastic.overlap,
+                search_kw=self.elastic.search_kw)
+            if "data" in extra:
+                self.data.load_state_dict(extra["data"])
+            self._batch_step, self._batch = step - 1, None
+            state = {"params": params, "opt": opt_state}
+            rebalances += 1
+            self.aggregator.reset(self.topology.host_ids)
+            self._event("rebalance", step=step,
+                        strategy=plan.strategy.describe(),
+                        downtime_s=time.monotonic() - t0,
+                        placement=(plan.placement.describe()
+                                   if plan.placement else None))
+            self._log(f"[rebalance] resumed at step {step} with "
+                      f"{plan.strategy.describe()}")
+            self.phase = "TRAINING"
+        if self.phase not in ("FAILED", "PREEMPTED") and step >= n_steps:
+            self.phase = "DONE"
+        return {"final_step": step, "state": state, "events": self.events,
+                "losses": self.losses, "phase": self.phase,
+                "topology": self.topology}
+
+
+def _parse_injections(slow: list, crash: list) -> tuple:
+    scenarios = []
+    for s in slow or []:
+        host, start, factor = s.split(":")
+        scenarios.append(SlowHost(host=int(host), start_step=int(start),
+                                  factor=float(factor)))
+    for c in crash or []:
+        bits = c.split(":")
+        scenarios.append(CrashStep(step=int(bits[0]),
+                                   times=int(bits[1]) if len(bits) > 1
+                                   else 1))
+    return tuple(scenarios)
 
 
 def main(argv=None) -> dict:
@@ -73,6 +367,21 @@ def main(argv=None) -> dict:
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--overrides", default="",
                     help="comma k=v LMCfg overrides (e.g. n_layers=4)")
+    # ---- self-healing elastic runtime (DESIGN.md §7) ----
+    ap.add_argument("--hosts", type=int, default=0,
+                    help="simulate N hosts over the visible devices and run "
+                         "the self-healing TrainController (straggler "
+                         "eviction + rebalance + resume)")
+    ap.add_argument("--inject-slow", action="append", default=[],
+                    metavar="HOST:STEP:FACTOR",
+                    help="fault injection: HOST runs FACTOR× slower from "
+                         "STEP (repeatable)")
+    ap.add_argument("--inject-crash", action="append", default=[],
+                    metavar="STEP[:TIMES]",
+                    help="fault injection: transient step failure at STEP")
+    ap.add_argument("--patience", type=int, default=3)
+    ap.add_argument("--straggler-warmup", type=int, default=3)
+    ap.add_argument("--max-rebalances", type=int, default=2)
     args = ap.parse_args(argv)
 
     if args.distributed:
@@ -89,12 +398,51 @@ def main(argv=None) -> dict:
     from repro.models.lm import build, param_count
     model = build(cfg)
 
+    # ---- optimizer / data / checkpoint (shared by both paths) ----
+    sched = Schedule(base_lr=args.lr, warmup=min(100, args.steps // 10 + 1),
+                     decay_steps=args.steps)
+    opt = (adamw(lr=sched) if args.optimizer == "adamw"
+           else adafactor(lr=sched))
+    data = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
+                                 vocab=cfg.vocab, seed=args.seed))
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+
+    # ---- self-healing controller path (simulated multi-host) ----
+    if args.hosts > 1:
+        n = len(jax.devices())
+        if n % args.hosts:
+            raise SystemExit(f"--hosts {args.hosts} must divide the "
+                             f"device count ({n})")
+        topology = HostTopology.uniform(args.hosts, n // args.hosts, TPU_V5E)
+        scenarios = _parse_injections(args.inject_slow, args.inject_crash)
+        # nominal clock: injected scenarios play on a fully simulated
+        # timeline, so detection is deterministic regardless of machine
+        # load (a real deployment feeds measured per-host times instead)
+        injector = (FaultInjector(scenarios=scenarios, n_hosts=args.hosts,
+                                  seed=args.seed, nominal=0.05)
+                    if scenarios else None)
+        ctl = TrainController(
+            model, cfg, opt, data, ckpt,
+            elastic=ElasticConfig(topology=topology,
+                                  patience=args.patience,
+                                  warmup=args.straggler_warmup,
+                                  max_rebalances=args.max_rebalances),
+            batch=args.batch, seq=args.seq, save_every=args.save_every,
+            injector=injector, log_every=args.log_every)
+        out = ctl.run(args.steps, seed=args.seed)
+        evictions = [e for e in out["events"] if e["kind"] == "evict"]
+        loss_str = (f", loss {out['losses'][0]:.4f} → {out['losses'][-1]:.4f}"
+                    if out["losses"] else " (resumed already complete)")
+        print(f"[done] step {out['final_step']} phase {out['phase']}, "
+              f"{len(evictions)} eviction(s){loss_str}")
+        return {"final_step": out["final_step"], "losses": out["losses"],
+                "events": out["events"], "phase": out["phase"]}
+
     # ---- mesh & strategy ----
     if args.auto:
         meta = lm_workload_meta(cfg, batch=args.batch, seq=args.seq)
         strat = auto_parallel(meta, len(jax.devices()), TPU_V5E)
         print(f"[auto] chose: {strat.describe()}")
-        from repro.core.planner import mesh_for_strategy
         mesh = mesh_for_strategy(strat)
     elif args.pp > 1:
         n = len(jax.devices())
@@ -105,7 +453,6 @@ def main(argv=None) -> dict:
         strat = StrategySpec(dp=n // args.pp, pp=args.pp,
                              micro_batches=args.micro_batches or 1,
                              schedule=args.schedule or "gpipe")
-        from repro.core.planner import mesh_for_strategy
         mesh = mesh_for_strategy(strat)
     else:
         mesh = parse_mesh(args.mesh) if args.mesh else jax.make_mesh(
@@ -118,15 +465,6 @@ def main(argv=None) -> dict:
               f"{args.schedule or plan.strategy.schedule}, µb="
               f"{args.micro_batches or plan.strategy.micro_batches}, "
               f"stage_layers {args.stage_layers or 'even/plan'}")
-
-    # ---- optimizer / data / checkpoint ----
-    sched = Schedule(base_lr=args.lr, warmup=min(100, args.steps // 10 + 1),
-                     decay_steps=args.steps)
-    opt = (adamw(lr=sched) if args.optimizer == "adamw"
-           else adafactor(lr=sched))
-    data = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
-                                 vocab=cfg.vocab, seed=args.seed))
-    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
 
     # ---- init or resume ----
     if pipelined:
@@ -153,7 +491,26 @@ def main(argv=None) -> dict:
             data.load_state_dict(extra["data"])
         print(f"[resume] from step {start_step}")
 
-    batch0 = data.next_batch()
+    # exactly-once data, same discipline as TrainController: batches are
+    # fetched idempotently per step (a retried step replays the SAME batch)
+    # and checkpoints record the position of the committed step — the jit
+    # warm-up example below is the batch of start_step, not a burned draw
+    fetched = {"step": start_step - 1, "batch": None, "before": None}
+
+    def batch_for(i):
+        if fetched["step"] != i:
+            fetched["before"] = data.state_dict()
+            fetched["batch"] = {k: jnp.asarray(v)
+                                for k, v in data.next_batch().items()}
+            fetched["step"] = i
+        return fetched["batch"]
+
+    def data_state_at(s):
+        if s == fetched["step"] and fetched["before"] is not None:
+            return dict(fetched["before"])     # save at the failed step
+        return data.state_dict()
+
+    batch0 = batch_for(start_step)
     with mesh:
         if pipelined:
             step_fn = plan.jit_pipeline_train_step(
@@ -176,7 +533,7 @@ def main(argv=None) -> dict:
         state0["err"] = grad_compress.init_error_tree(params)
 
     def one_step(i, st):
-        batch = {k: jnp.asarray(v) for k, v in data.next_batch().items()}
+        batch = batch_for(i)
         with mesh:
             if pipelined:
                 p, o, loss = step_fn(st["params"], st["opt"],
@@ -196,19 +553,21 @@ def main(argv=None) -> dict:
         return new
 
     def on_step(i, st, dt):
-        if monitor.observe(dt):
+        if monitor.observe(dt):       # one-shot: True on the flag transition
             print(f"[straggler] flagged at step {i} "
                   f"(dt={dt:.3f}s vs mean {monitor.mean:.3f}s)")
-            monitor.flagged = False   # keep training; eviction is external
+            monitor.reset()           # keep training; eviction is external
 
     loop = FaultTolerantLoop(ckpt, save_every=args.save_every)
     final_step, state = loop.run(
         state=state0, step_fn=one_step, n_steps=args.steps,
         start_step=start_step,
-        extra_fn=lambda st: {"data": data.state_dict()},
+        extra_fn=lambda st, s: {"data": data_state_at(s)},
         on_step=on_step)
 
-    print(f"[done] step {final_step}, loss {losses[0]:.4f} → {losses[-1]:.4f}")
+    loss_str = (f", loss {losses[0]:.4f} → {losses[-1]:.4f}" if losses
+                else " (resumed already complete)")
+    print(f"[done] step {final_step}{loss_str}")
     return {"final_step": final_step, "losses": losses}
 
 

@@ -1,5 +1,9 @@
-"""Runtime services: fault tolerance, straggler mitigation, elastic scaling."""
-from repro.runtime.elastic import ElasticContext, shrink_devices  # noqa: F401
+"""Runtime services: fault tolerance, straggler mitigation, elastic scaling,
+fault injection (the self-healing loop of DESIGN.md §7)."""
+from repro.runtime.elastic import (ElasticContext, HostTopology,  # noqa: F401
+                                   SimHost, shrink_devices)
 from repro.runtime.fault_tolerance import FaultTolerantLoop  # noqa: F401
+from repro.runtime.faults import (CrashStep, FaultInjector,  # noqa: F401
+                                  Preemption, SimClock, SlowHost)
 from repro.runtime.straggler import (HostStragglerAggregator,  # noqa: F401
                                      StragglerMonitor)

@@ -36,6 +36,44 @@ def _ns(mesh, specs):
                         is_leaf=lambda t: isinstance(t, shd.PartitionSpec))
 
 
+def search_cluster(meta: WorkloadMeta, spec: ClusterSpec, *,
+                   overlap: float = 0.5, search_kw: dict | None = None):
+    """Best strategy candidate for ``spec``; raises when nothing fits.
+
+    The single entry the elastic paths share (initial planning in the
+    TrainController and :meth:`ElasticContext.rebalance`) — one place for
+    the search defaults and the no-feasible-strategy error."""
+    from repro.core.auto import search
+    cands = search(meta, spec, top_k=1, overlap=overlap,
+                   **(search_kw or {}))
+    if not cands:
+        raise RuntimeError(
+            f"no feasible strategy for {meta.name} on "
+            + "+".join(f"{g.n_devices}×{g.hw.name}" for g in spec.groups))
+    return cands[0]
+
+
+def plan_for_cluster(model, meta: WorkloadMeta, spec: ClusterSpec, *,
+                     devices=None, overlap: float = 0.5,
+                     search_kw: dict | None = None):
+    """Search ``spec`` and compile the winning plan over ``devices``.
+
+    Returns ``(plan, candidate)``.  The placement is attached only on
+    mixed-hardware clusters, keeping homogeneous plans byte-identical to
+    the pre-heterogeneous planner (compile_plan's documented contract).
+    """
+    from repro.core.planner import mesh_for_strategy
+    cand = search_cluster(meta, spec, overlap=overlap, search_kw=search_kw)
+    mesh = mesh_for_strategy(cand.strategy, devices=devices,
+                             cluster_spec=spec)
+    plan = compile_plan(
+        model, mesh, strategy=cand.strategy, cluster_spec=spec,
+        workload_meta=meta,
+        placement=None if spec.is_homogeneous else cand.placement,
+        overlap=overlap)
+    return plan, cand
+
+
 @dataclasses.dataclass
 class ElasticContext:
     """Rebuild (plan, params, opt_state) from a checkpoint on a new mesh."""
@@ -76,7 +114,8 @@ class ElasticContext:
     def rebalance(self, ckpt: CheckpointManager,
                   cluster_spec: ClusterSpec,
                   workload_meta: WorkloadMeta, *, new_mesh=None,
-                  overlap: float = 0.5):
+                  devices=None, overlap: float = 0.5,
+                  search_kw: dict | None = None):
         """Re-mesh onto a **different hardware mix**.
 
         Runs the heterogeneity-aware strategy search over ``cluster_spec``
@@ -88,22 +127,25 @@ class ElasticContext:
         (unchanged) global batch.
 
         The winning strategy is only known after the search, so the mesh
-        is normally built here (``new_mesh=None``).  A caller-supplied
-        mesh is validated against the winner — a mesh realising a
-        different (dp, tp, pp) would silently train a different
-        parallelism than the placement describes.
+        is normally built here (``new_mesh=None``) — over ``devices`` when
+        given (straggler eviction passes the *surviving* device list from
+        :func:`shrink_devices`), else over all of ``jax.devices()``.  A
+        caller-supplied mesh is validated against the winner — a mesh
+        realising a different (dp, tp, pp) would silently train a
+        different parallelism than the placement describes.
+
+        ``search_kw`` forwards to :func:`repro.core.auto.search` (e.g.
+        ``max_pp=1`` to stay in the checkpoint's non-pipelined parameter
+        layout — pipelined plans pad params per stage, so a live re-plan
+        across that boundary would need a layout migration).
         """
-        from repro.core.auto import search
         from repro.core.planner import mesh_for_strategy
-        cands = search(workload_meta, cluster_spec, top_k=1, overlap=overlap)
-        if not cands:
-            raise RuntimeError(
-                f"no feasible strategy for {workload_meta.name} on "
-                + "+".join(f"{g.n_devices}×{g.hw.name}"
-                           for g in cluster_spec.groups))
-        strat = cands[0].strategy
+        cand = search_cluster(workload_meta, cluster_spec, overlap=overlap,
+                              search_kw=search_kw)
+        strat = cand.strategy
         if new_mesh is None:
-            new_mesh = mesh_for_strategy(strat, cluster_spec=cluster_spec)
+            new_mesh = mesh_for_strategy(strat, devices=devices,
+                                         cluster_spec=cluster_spec)
         else:
             dp = 1
             for a in ("pod", "data"):
@@ -119,9 +161,125 @@ class ElasticContext:
         return self.remesh(ckpt, new_mesh, strategy=strat,
                            cluster_spec=cluster_spec,
                            workload_meta=workload_meta,
-                           placement=cands[0].placement, overlap=overlap)
+                           placement=(None if cluster_spec.is_homogeneous
+                                      else cand.placement), overlap=overlap)
 
 
-def shrink_devices(devices, exclude_hosts: set):
-    """Filter a device list to exclude flagged hosts (straggler eviction)."""
-    return [d for d in devices if d.process_index not in exclude_hosts]
+def shrink_devices(devices, exclude_hosts: set, *, host_of=None):
+    """Filter a device list to exclude flagged hosts (straggler eviction).
+
+    ``host_of(device) -> host_id`` defaults to the real multi-process
+    mapping (``device.process_index``); a :class:`HostTopology` supplies
+    the simulated mapping when one process stands in for a fleet.
+    """
+    host_of = host_of or (lambda d: d.process_index)
+    return [d for d in devices if host_of(d) not in exclude_hosts]
+
+
+# ---------------------------------------------------------------------------
+# simulated multi-host topology (single-process stand-in for a fleet)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SimHost:
+    """One simulated host: ``n_devices`` consecutive devices of one kind.
+
+    ``offset`` is the host's first index into the flat device list; it is
+    assigned by :class:`HostTopology` (declaration-order packing) and
+    **preserved across eviction**, so a surviving host keeps its original
+    physical devices rather than sliding down onto the evicted host's.
+    """
+    host: int
+    hw: Any                    # core.cost_model.Hardware
+    n_devices: int
+    offset: int = -1           # assigned by HostTopology when < 0
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTopology:
+    """Partition the flat ``jax.devices()`` list into simulated hosts.
+
+    On a real fleet ``device.process_index`` names the host; in the
+    single-process harness devices are dealt to hosts in declaration
+    order (host 0 gets the first ``n_devices`` devices, …).  The
+    topology is the controller's source of truth for
+
+    - ``cluster_spec()``: the per-hardware-group view the cost model and
+      hetero balancer consume (consecutive same-hardware hosts merge
+      into one :class:`DeviceGroup`),
+    - ``host_of``: device → host id (feeds :func:`shrink_devices`),
+    - ``without(hosts)``: the surviving topology after eviction.
+    """
+    hosts: tuple
+
+    def __post_init__(self):
+        fixed, off = [], 0
+        for h in self.hosts:
+            if h.offset < 0:
+                h = dataclasses.replace(h, offset=off)
+            fixed.append(h)
+            off = h.offset + h.n_devices
+        object.__setattr__(self, "hosts", tuple(fixed))
+
+    @classmethod
+    def uniform(cls, n_hosts: int, devices_per_host: int, hw
+                ) -> "HostTopology":
+        return cls(hosts=tuple(SimHost(h, hw, devices_per_host)
+                               for h in range(n_hosts)))
+
+    @property
+    def n_devices(self) -> int:
+        return sum(h.n_devices for h in self.hosts)
+
+    @property
+    def host_ids(self) -> tuple:
+        return tuple(h.host for h in self.hosts)
+
+    def host_of(self, device) -> int:
+        """Map a device (by position in the flat device list) to its
+        simulated host."""
+        idx = device.id if hasattr(device, "id") else int(device)
+        for h in self.hosts:
+            if h.offset <= idx < h.offset + h.n_devices:
+                return h.host
+        raise ValueError(f"device index {idx} outside the topology's "
+                         f"device ranges "
+                         f"{[(h.offset, h.offset + h.n_devices) for h in self.hosts]}")
+
+    def devices(self, all_devices, exclude: set = frozenset()) -> list:
+        """The topology's device list minus excluded hosts (in host order).
+
+        Each host contributes its *original* flat-device range — after an
+        eviction the survivors keep their own hardware (the evicted
+        host's devices are simply absent)."""
+        need = max(h.offset + h.n_devices for h in self.hosts)
+        if len(all_devices) < need:
+            raise ValueError(
+                f"topology wants device indices up to {need}, have "
+                f"{len(all_devices)}")
+        out = []
+        for h in self.hosts:
+            if h.host not in exclude:
+                out.extend(all_devices[h.offset:h.offset + h.n_devices])
+        return out
+
+    def cluster_spec(self) -> ClusterSpec:
+        """Per-group hardware view: consecutive same-hardware hosts merge."""
+        from repro.core.cost_model import DeviceGroup
+        groups = []
+        for h in self.hosts:
+            if groups and groups[-1].hw.name == h.hw.name:
+                groups[-1] = dataclasses.replace(
+                    groups[-1], n_devices=groups[-1].n_devices + h.n_devices)
+            else:
+                groups.append(DeviceGroup(
+                    f"{h.hw.name}#{len(groups)}", h.hw, h.n_devices))
+        return ClusterSpec(groups=tuple(groups))
+
+    def without(self, evicted: set) -> "HostTopology":
+        """The surviving topology after evicting ``evicted`` hosts."""
+        keep = tuple(h for h in self.hosts if h.host not in evicted)
+        if not keep:
+            raise ValueError("eviction would remove every host")
+        return HostTopology(hosts=keep)

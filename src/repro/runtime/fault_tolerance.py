@@ -33,11 +33,25 @@ class FaultTolerantLoop:
 
     def __post_init__(self):
         self._term_requested = False
+        self._stop_requested = False
         self._prev_handlers = {}
 
     # --- signal handling ---
     def _on_term(self, signum, frame):
         self._term_requested = True
+
+    @property
+    def preempted(self) -> bool:
+        """True once a SIGTERM/SIGINT has been observed."""
+        return self._term_requested
+
+    # --- cooperative stop (elastic re-plan) ---
+    def request_stop(self) -> None:
+        """Ask the loop to exit after the current step with a final
+        synchronous checkpoint — the controller's straggler-eviction hook
+        (``on_step`` calls this; the loop returns and the caller re-plans
+        and calls :meth:`run` again with the new state)."""
+        self._stop_requested = True
 
     def install_signal_handlers(self) -> None:
         for sig in (signal.SIGTERM, signal.SIGINT):
@@ -54,9 +68,15 @@ class FaultTolerantLoop:
         """Run ``state = step_fn(step, state)`` for steps [start, n_steps).
 
         ``extra_fn(state) -> dict`` supplies non-array state (data pipeline
-        position etc.) for each checkpoint.  Returns (final_step, state).
+        position etc.) for each checkpoint; an ``extra_fn(state, step)``
+        two-argument form also receives the step being committed — the
+        retry-exhausted final save commits at the *failed* step, and a
+        data pipeline that already consumed that step's batch must report
+        the position of the committed step, not its cursor (exactly-once).
+        Returns (final_step, state).
         """
         self.install_signal_handlers()
+        self._stop_requested = False
         step = start_step
         try:
             while step < n_steps:
@@ -77,7 +97,7 @@ class FaultTolerantLoop:
                 step += 1
                 if step % self.save_every == 0:
                     self._save(step, state, extra_fn)
-                if self._term_requested:
+                if self._term_requested or self._stop_requested:
                     self._final_save(step, state, extra_fn)
                     break
             else:
@@ -87,8 +107,28 @@ class FaultTolerantLoop:
             self.restore_signal_handlers()
         return step, state
 
+    @staticmethod
+    def _extra(step, state, extra_fn) -> dict:
+        if extra_fn is None:
+            return {}
+        import inspect
+        try:
+            params = inspect.signature(extra_fn).parameters.values()
+            # two-arg form = a second REQUIRED positional parameter; a
+            # defaulted second parameter (extra_fn=lambda st, verbose=False)
+            # keeps the documented one-arg contract and must not have the
+            # step misbound into it
+            required = [p for p in params
+                        if p.kind in (p.POSITIONAL_ONLY,
+                                      p.POSITIONAL_OR_KEYWORD)
+                        and p.default is p.empty]
+            two_arg = len(required) >= 2
+        except (TypeError, ValueError):
+            two_arg = False
+        return extra_fn(state, step) if two_arg else extra_fn(state)
+
     def _save(self, step, state, extra_fn):
-        extra = extra_fn(state) if extra_fn else {}
+        extra = self._extra(step, state, extra_fn)
         if self.async_save:
             self.ckpt.save_async(step, state, extra=extra)
         else:
@@ -96,4 +136,4 @@ class FaultTolerantLoop:
 
     def _final_save(self, step, state, extra_fn):
         self.ckpt.wait()
-        self.ckpt.save(step, state, extra=extra_fn(state) if extra_fn else {})
+        self.ckpt.save(step, state, extra=self._extra(step, state, extra_fn))

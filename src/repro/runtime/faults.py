@@ -1,0 +1,149 @@
+"""Fault injection: deterministic failure scenarios on a simulated
+multi-host clock.
+
+The self-healing controller (DESIGN.md §7) is driven by three inputs that
+on a real fleet come from the outside world: per-host step times, step
+exceptions, and preemption signals.  This module synthesizes all three
+deterministically so the straggler → evict → rebalance → resume loop can
+be exercised end-to-end in a single process:
+
+- :class:`SlowHost` — one host's step time is inflated by ``factor`` from
+  ``start_step`` (optionally until ``end_step``): the failing-HBM /
+  thermal-throttle / noisy-neighbour case that straggler eviction targets.
+- :class:`CrashStep` — the step function raises a transient
+  ``RuntimeError`` ``times`` times at ``step`` (DCN flake, preempted
+  reduction); exercised against :class:`FaultTolerantLoop`'s bounded
+  retry, which must replay the *same* batch (exactly-once data).
+- :class:`Preemption` — SIGTERM is delivered to the process before
+  ``step`` (TPU maintenance events), exercising the final-synchronous-
+  checkpoint path.
+
+Per-host times are a pure function of ``(seed, step, host)`` — the same
+scenario always produces the same timeline, so tests and
+``benchmarks/fig_elastic.py`` are deterministic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import signal
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowHost:
+    """Host ``host`` runs ``factor``× slower from ``start_step`` on."""
+    host: int
+    start_step: int
+    factor: float = 3.0
+    end_step: int | None = None     # None = slow forever (until evicted)
+
+    def active(self, step: int) -> bool:
+        return (step >= self.start_step
+                and (self.end_step is None or step < self.end_step))
+
+
+@dataclasses.dataclass(frozen=True)
+class CrashStep:
+    """The step raises a transient error ``times`` times at ``step``."""
+    step: int
+    times: int = 1
+    message: str = "injected transient step failure"
+
+
+@dataclasses.dataclass(frozen=True)
+class Preemption:
+    """SIGTERM is delivered immediately before ``step`` runs."""
+    step: int
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Deterministic scenario playback for the training controller.
+
+    ``host_times(step, base)`` is the simulated multi-host clock: every
+    host reports ``base`` (the measured or nominal step time) perturbed
+    by a small deterministic jitter, with active :class:`SlowHost`
+    scenarios multiplied in.  ``maybe_fail`` / ``maybe_preempt`` are
+    called by the controller's step function / loop hooks.
+    """
+    scenarios: tuple = ()
+    n_hosts: int = 1
+    jitter: float = 0.02            # relative σ of per-host noise
+    seed: int = 0
+    # nominal step time: when set, host_times ignores the measured base
+    # entirely — the whole timeline becomes a pure function of (seed,
+    # step, host), immune to load spikes on the machine running the
+    # simulation (CI runners flagging the wrong host)
+    nominal: float | None = None
+
+    def __post_init__(self):
+        self.scenarios = tuple(self.scenarios)
+        self._crash_budget = {
+            id(s): s.times for s in self.scenarios
+            if isinstance(s, CrashStep)}
+        self._preempted: set = set()
+
+    # --- simulated multi-host clock ---
+    def slow_factor(self, step: int, host: int) -> float:
+        f = 1.0
+        for s in self.scenarios:
+            if isinstance(s, SlowHost) and s.host == host and s.active(step):
+                f *= s.factor
+        return f
+
+    def host_times(self, step: int, base: float = 1.0,
+                   hosts=None) -> dict:
+        """host_id → simulated step time at ``step``.
+
+        Deterministic in ``(seed, step, host)``: replaying a scenario
+        (e.g. the naive vs self-healing arms of fig_elastic) sees the
+        identical timeline.
+        """
+        if self.nominal is not None:
+            base = self.nominal
+        hosts = range(self.n_hosts) if hosts is None else hosts
+        out = {}
+        for h in hosts:
+            rng = np.random.default_rng(
+                (self.seed * 1_000_003 + step) * 1_000_003 + h)
+            noise = 1.0 + self.jitter * float(rng.standard_normal())
+            out[h] = base * max(noise, 0.1) * self.slow_factor(step, h)
+        return out
+
+    # --- step failures ---
+    def maybe_fail(self, step: int) -> None:
+        """Raise the scenario's transient error while its budget lasts."""
+        for s in self.scenarios:
+            if isinstance(s, CrashStep) and s.step == step:
+                if self._crash_budget.get(id(s), 0) > 0:
+                    self._crash_budget[id(s)] -= 1
+                    raise RuntimeError(f"{s.message} (step {step})")
+
+    # --- preemption ---
+    def maybe_preempt(self, step: int) -> None:
+        """Deliver SIGTERM to ourselves once per Preemption scenario."""
+        for s in self.scenarios:
+            if isinstance(s, Preemption) and s.step == step \
+                    and id(s) not in self._preempted:
+                self._preempted.add(id(s))
+                os.kill(os.getpid(), signal.SIGTERM)
+
+
+@dataclasses.dataclass
+class SimClock:
+    """Accumulates simulated wall-clock: a synchronous step takes as long
+    as its slowest participating host."""
+    t: float = 0.0
+    steps: int = 0
+
+    def advance(self, host_times: dict) -> float:
+        dt = max(host_times.values())
+        self.t += dt
+        self.steps += 1
+        return dt
+
+    def charge(self, seconds: float) -> None:
+        """Account non-step downtime (checkpoint restore, re-compile)."""
+        self.t += seconds

@@ -1,12 +1,21 @@
 """Straggler detection: per-step timing, EMA outlier flagging, mitigation.
 
 The ATC'22 Whale balances *heterogeneous* GPUs by skewing work; TPU pods are
-homogeneous, so the production analogue (DESIGN.md §2) is detecting a *slow*
-host (failing HBM, thermal throttle, noisy neighbour on DCN) and evicting it
-via elastic re-mesh.  The monitor keeps an EMA + variance of step times and
-flags sustained outliers; in a multi-host deployment each host reports its
-local step time and the controller aggregates (single-process here: the
-aggregation path is exercised with synthetic per-host timings in tests).
+homogeneous, so the production analogue (DESIGN.md §2, §7) is detecting a
+*slow* host (failing HBM, thermal throttle, noisy neighbour on DCN) and
+evicting it via elastic re-mesh.  The monitor keeps an EMA + variance of
+step times and flags sustained outliers; in a multi-host deployment each
+host reports its local step time and the controller aggregates
+(single-process here: the aggregation path is exercised with synthetic
+per-host timings from :mod:`repro.runtime.faults`).
+
+Flag semantics are **one-shot**: :meth:`StragglerMonitor.observe` returns
+True exactly once, on the step the sustained-outlier flag trips; the
+``flagged`` attribute stays latched (queryable) until :meth:`reset`.  The
+:class:`HostStragglerAggregator` additionally remembers evicted hosts so a
+host that has already been handed to the eviction machinery is never
+re-reported — the pre-fix behaviour re-flagged an evicted host on every
+``observe`` call, which made the controller loop evict forever.
 """
 from __future__ import annotations
 
@@ -22,19 +31,37 @@ class StragglerMonitor:
     warmup: int = 5               # ignore the first steps (compile etc.)
 
     def __post_init__(self):
-        self.mean = 0.0
-        self.var = 0.0
-        self.n = 0
+        self.reset(clear_stats=True)
+
+    def reset(self, *, clear_stats: bool = False) -> None:
+        """Re-arm the one-shot flag; ``clear_stats`` also restarts the
+        timing statistics (use after a re-plan changes the step time)."""
         self.consecutive = 0
         self.flagged = False
+        if clear_stats:
+            self.mean = 0.0
+            self.var = 0.0
+            self._m2 = 0.0        # Welford sum of squared deviations
+            self.n = 0
 
     def observe(self, dt: float) -> bool:
-        """Record one step time; returns True if a straggler is flagged."""
+        """Record one step time; True exactly once, when the flag trips.
+
+        After the flag trips the monitor latches (``flagged`` stays True,
+        further observations are ignored) until :meth:`reset`.
+        """
         self.n += 1
         if self.n <= self.warmup:
-            self.mean = dt if self.n == 1 else (
-                self.mean + (dt - self.mean) / self.n)
+            # Welford: seed mean AND variance from the warmup samples so
+            # the first post-warmup step is not compared against std == 0
+            delta = dt - self.mean
+            self.mean += delta / self.n
+            self._m2 += delta * (dt - self.mean)
+            if self.n >= 2:
+                self.var = self._m2 / (self.n - 1)
             return False
+        if self.flagged:
+            return False          # latched; one-shot already consumed
         std = math.sqrt(max(self.var, 1e-12))
         is_out = dt > self.mean + self.threshold * max(std, 0.05 * self.mean)
         if is_out:
@@ -43,31 +70,61 @@ class StragglerMonitor:
             self.consecutive = 0
         if self.consecutive >= self.patience:
             self.flagged = True
+            return True
         # EMA update (outliers excluded so one bad host can't drag the mean)
         if not is_out:
             d = self.ema_decay
             delta = dt - self.mean
             self.mean += (1 - d) * delta
             self.var = d * (self.var + (1 - d) * delta * delta)
-        return self.flagged
+        return False
 
 
 @dataclasses.dataclass
 class HostStragglerAggregator:
-    """Controller view: one monitor per host; decides eviction."""
+    """Controller view: one monitor per host; decides eviction.
+
+    ``observe`` returns only *newly* flagged hosts (one-shot, like the
+    monitors); hosts handed to :meth:`evict` are dropped entirely and
+    silently ignored if their timings keep arriving (a dying host may
+    emit a few more heartbeats before the re-mesh lands).
+    """
     n_hosts: int
     threshold: float = 2.0
     patience: int = 3
+    warmup: int = 5
 
     def __post_init__(self):
-        self.monitors = {h: StragglerMonitor(threshold=self.threshold,
-                                             patience=self.patience)
-                         for h in range(self.n_hosts)}
+        self.monitors = {h: self._new_monitor() for h in range(self.n_hosts)}
+        self.evicted: set = set()
+
+    def _new_monitor(self) -> StragglerMonitor:
+        return StragglerMonitor(threshold=self.threshold,
+                                patience=self.patience, warmup=self.warmup)
 
     def observe(self, host_times: dict) -> list:
-        """host_id → step time; returns hosts flagged for replacement."""
+        """host_id → step time; returns hosts *newly* flagged for eviction."""
         flagged = []
         for h, t in host_times.items():
-            if self.monitors[h].observe(t):
+            mon = self.monitors.get(h)
+            if mon is None:                 # evicted / unknown host
+                continue
+            if mon.observe(t):
                 flagged.append(h)
         return flagged
+
+    def evict(self, host: int) -> None:
+        """Mark ``host`` as evicted; it is never reported again."""
+        self.evicted.add(host)
+        self.monitors.pop(host, None)
+
+    def reset(self, hosts=None) -> None:
+        """Fresh monitors after a re-plan (step times change shape).
+
+        ``hosts``: the surviving host ids; default = current non-evicted
+        set.  Evicted hosts stay excluded.
+        """
+        if hosts is None:
+            hosts = list(self.monitors)
+        self.monitors = {h: self._new_monitor() for h in hosts
+                         if h not in self.evicted}

@@ -68,8 +68,8 @@ def test_gpipe_loss_matches_reference():
         model = build(cfg)
         mesh = jax.make_mesh((2, 2, 2), ("stage", "data", "model"))
         rules = wh.hybrid_rules(mesh)
-        lfn, pspecs = pipe.make_gpipe_loss(model, mesh, rules,
-                                           micro_batches=4)
+        lfn, pspecs = pipe.make_pipeline_loss(model, mesh, rules,
+                                              micro_batches=4)
         psh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspecs,
                            is_leaf=lambda t: isinstance(
                                t, jax.sharding.PartitionSpec))
@@ -99,8 +99,8 @@ def test_gpipe_training_reduces_loss():
         mesh = jax.make_mesh((2, 2, 1), ("stage", "data", "model"))
         rules = wh.hybrid_rules(mesh)
         opt = adamw(lr=1e-3)
-        step = pipe.make_gpipe_train_step(model, mesh, rules, opt,
-                                          micro_batches=2, donate=False)
+        step = pipe.make_pipeline_train_step(model, mesh, rules, opt,
+                                             micro_batches=2, donate=False)
         pspecs = pipe.staged_specs(rules, model.axes(), model.param_shapes())
         psh = jax.tree.map(lambda s: jax.NamedSharding(mesh, s), pspecs,
                            is_leaf=lambda t: isinstance(

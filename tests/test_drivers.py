@@ -35,4 +35,22 @@ def test_serve_driver(tmp_path):
     out = run_cli(["repro.launch.serve", "--arch", "tinyllama-1.1b",
                    "--smoke", "--requests", "4", "--batch-slots", "2",
                    "--gen", "4", "--prompt-len", "8", "--max-len", "16"])
-    assert "[serve] 4 requests" in out
+    # regression: finished requests used to be freed from their slot in the
+    # same pass that marked them done, so the driver's `done` list stayed
+    # empty; the driver now exits non-zero unless every request completes
+    assert "[serve] 4 requests completed" in out
+
+
+@pytest.mark.slow
+def test_train_driver_self_healing_cli(tmp_path):
+    """The --hosts CLI path: injected straggler → evict → rebalance."""
+    out = run_cli(["repro.launch.train", "--arch", "tinyllama-1.1b",
+                   "--smoke", "--steps", "12", "--batch", "8",
+                   "--seq", "64", "--hosts", "2", "--inject-slow", "1:4:5",
+                   "--straggler-warmup", "2", "--patience", "2",
+                   "--save-every", "4", "--log-every", "4",
+                   "--ckpt-dir", str(tmp_path),
+                   "--overrides", "n_layers=2"], devices=4)
+    assert "[evict] hosts [1]" in out
+    assert "[rebalance] resumed" in out
+    assert "phase DONE, 1 eviction(s)" in out

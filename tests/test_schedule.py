@@ -321,3 +321,20 @@ def test_auto_search_enumerates_both_schedules():
               for s in enumerate_strategies(meta, 8)}
     assert (True, "gpipe") in scheds and (True, "1f1b") in scheds
     assert (False, "1f1b") not in scheds     # schedule only matters for pp>1
+
+
+def test_gpipe_aliases_emit_deprecation_and_delegate(monkeypatch):
+    """The pre-schedule-subsystem make_gpipe_* shims warn and delegate
+    (in-repo callers are all migrated; the shims stay for external code)."""
+    import repro.core.pipeline as pipe
+    monkeypatch.setattr(pipe, "make_pipeline_loss",
+                        lambda *a, **k: ("loss", k))
+    monkeypatch.setattr(pipe, "make_pipeline_train_step",
+                        lambda *a, **k: ("step", k))
+    with pytest.warns(DeprecationWarning, match="make_gpipe_loss"):
+        out, kw = pipe.make_gpipe_loss(None, None, None, micro_batches=3)
+    assert out == "loss" and kw["micro_batches"] == 3
+    with pytest.warns(DeprecationWarning, match="make_gpipe_train_step"):
+        out, kw = pipe.make_gpipe_train_step(None, None, None, None,
+                                             micro_batches=2, donate=False)
+    assert out == "step" and kw == {"micro_batches": 2, "donate": False}
