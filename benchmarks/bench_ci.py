@@ -1,14 +1,17 @@
 """CI benchmark-regression gate: run the analytic benchmarks, record the
 headline numbers, fail on regression below the recorded floors.
 
-    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR5.json]
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR6.json]
 
 The analytic (cost-model / simulated-clock) benchmarks are deterministic —
 pure arithmetic over hardware tables, no execution, no timing noise — so
 they can be gated hard in CI.  This script runs fig2 (schedule grid), fig7
-(heterogeneous balancing), fig9 (nested DP×EP MoE), and fig_elastic
-(self-healing straggler eviction), writes every headline metric to a JSON
-artifact, and exits non-zero if any gated metric falls below its floor:
+(heterogeneous balancing), fig9 (nested DP×EP MoE), fig_elastic
+(self-healing straggler eviction), and the kernel roofline pass
+(benchmarks.kernel_bench — fused Pallas kernels vs jnp refs per Hardware
+entry, with interpret-mode numerics), writes every headline metric to a
+JSON artifact, and exits non-zero if any gated metric falls below its
+floor:
 
     fig7_hetero_speedup      >= 2.5   (aware vs naive on mixed V100/P100)
     fig2_uneven_speedup      >= 2.5   (uneven vs even stages, mixed cluster)
@@ -19,12 +22,20 @@ artifact, and exits non-zero if any gated metric falls below its floor:
     fig_elastic_recovery_ratio >= 0.9     (post-heal throughput lands on
                                            the rebalanced plan's cost-model
                                            prediction; also gated <= 1.1)
+    kernel_flash_speedup_tpu >= 2.0   (fused flash fwd+bwd vs materialised
+                                       scores on the target part)
+    kernel_flash_speedup_min >= 1.0   (never analytically slower, any part)
+    kernel_ssd_speedup_min   >= 5.0   (chunked scan vs quadratic, any part)
+    kernel_xent_footprint_min >= 5.0  (fused loss-head live bytes vs the
+                                       chunked ref's logits block)
 
 Floors are deliberately below the current values (2.77 / 2.66 / 1.98 /
-2.20 / 0.98) so legitimate cost-model refinements have headroom, while a
-change that destroys a headline win (the balancer, the schedule memory
-model, the ep pricing, the eviction loop) fails the ``bench`` CI job
-loudly.
+2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8) so legitimate refinements have
+headroom, while a change that destroys a headline win (the balancer, the
+schedule memory model, the ep pricing, the eviction loop, the kernel
+tiling/autotuner) fails the ``bench`` CI job loudly.  The kernel section
+additionally gates numerics (interpret-mode max |err| vs oracle) and the
+static VMEM budget as structural invariants.
 """
 from __future__ import annotations
 
@@ -38,6 +49,10 @@ FLOORS = {
     "fig9_nested_vs_flat_speedup": 1.0,
     "fig_elastic_selfheal_vs_naive": 1.5,
     "fig_elastic_recovery_ratio": 0.9,
+    "kernel_flash_speedup_tpu": 2.0,
+    "kernel_flash_speedup_min": 1.0,
+    "kernel_ssd_speedup_min": 5.0,
+    "kernel_xent_footprint_min": 5.0,
 }
 
 
@@ -84,6 +99,20 @@ def collect() -> dict:
     out["fig_elastic_per_scenario"] = {
         name: {k: v for k, v in r.items() if k != "scenario"}
         for name, r in fe["per_scenario"].items()}
+
+    # ---- kernel speed pass: roofline speedups + interpret numerics ----
+    import benchmarks.kernel_bench as kb
+    rl = kb.roofline()
+    out["kernel_flash_speedup_tpu"] = rl["flash_speedup_tpu"]
+    out["kernel_flash_speedup_min"] = rl["flash_speedup_min"]
+    out["kernel_ssd_speedup_min"] = rl["ssd_speedup_min"]
+    out["kernel_xent_footprint_min"] = rl["xent_footprint_min"]
+    out["kernel_roofline"] = {k: rl[k] for k in
+                              ("flash", "xent", "ssd", "tiles",
+                               "flash_traffic", "xent_footprint")}
+    rows = kb.main(csv=False)
+    out["kernel_numerics_max_err"] = max(r[3] for r in rows)
+    out["kernel_vmem_max_kib"] = max(r[4] for r in rows)
     return out
 
 
@@ -109,12 +138,18 @@ def gate(metrics: dict) -> list:
                         "prediction by >10% — the simulated clock and the "
                         "search disagree (fig_elastic_recovery_ratio_max "
                         "> 1.1)")
+    if metrics.get("kernel_numerics_max_err", 1.0) >= 1e-2:
+        failures.append("a fused kernel drifted from its jnp oracle "
+                        "(kernel_numerics_max_err >= 1e-2)")
+    if metrics.get("kernel_vmem_max_kib", 1e9) >= 16 * 1024:
+        failures.append("a kernel tile working set exceeds the 16 MiB "
+                        "VMEM budget (kernel_vmem_max_kib)")
     return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR5.json")
+    ap.add_argument("--out", default="BENCH_PR6.json")
     args = ap.parse_args(argv)
     metrics = collect()
     with open(args.out, "w") as f:

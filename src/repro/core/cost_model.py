@@ -55,12 +55,25 @@ class Hardware:
     hbm_bytes: float             # device memory per chip
     link_bw: dict                # mesh-axis kind -> bytes/s per chip (uni-dir)
     mxu_eff: float = 0.55        # achievable fraction of peak on real matmuls
+    # on-chip fast-memory budget visible to a Pallas program (VMEM on TPU;
+    # the shared-memory/L2 working-set analog on GPUs).  The per-Hardware
+    # kernel autotuner (repro.kernels.autotune) sizes its tiles against
+    # this, so a small-VMEM part tiles smaller than a big one.
+    vmem_bytes: float = 16 * 2**20
     axis_kind: Mapping[str, str] = dataclasses.field(
         default_factory=lambda: {})
 
     def bw_for_axis(self, axis: str) -> float:
         kind = self.axis_kind.get(axis, "fast")
         return self.link_bw[kind]
+
+    @property
+    def flops_per_hbm_byte(self) -> float:
+        """Roofline balance point: achievable FLOPs per HBM byte moved.
+        A kernel tile must reuse each loaded byte at least this many times
+        or the part runs bandwidth-bound — the autotuner grows tiles on
+        high-ratio parts (T4, TPU) and shrinks them on low-ratio ones."""
+        return self.peak_flops * self.mxu_eff / self.hbm_bw
 
 
 # TPU v5e (assignment constants): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI.
@@ -69,6 +82,7 @@ TPU_V5E = Hardware(
     peak_flops=197e12,
     hbm_bw=819e9,
     hbm_bytes=16 * 2**30,
+    vmem_bytes=16 * 2**20,                    # ~16 MiB VMEM per core
     link_bw={"fast": 50e9, "slow": 6.25e9},   # ICI link / DCN per chip
     axis_kind={"data": "fast", "model": "fast", "stage": "fast",
                "pod": "slow"},
@@ -81,6 +95,7 @@ V100_PAPER = Hardware(
     peak_flops=125e12,            # V100 tensor-core fp16 peak
     hbm_bw=900e9,
     hbm_bytes=16 * 2**30,
+    vmem_bytes=8 * 2**20,                     # Volta SMEM+L2 working set
     link_bw={"fast": 150e9, "slow": 35e9 / 8 / 2},  # NVLink vs 35Gb shared by 8
     axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
     mxu_eff=0.45,
@@ -93,6 +108,7 @@ P100_16G = Hardware(
     peak_flops=18.7e12,
     hbm_bw=732e9,
     hbm_bytes=16 * 2**30,
+    vmem_bytes=4 * 2**20,                     # Pascal: half Volta's on-chip
     link_bw={"fast": 80e9, "slow": 35e9 / 8 / 2},   # NVLink1 vs shared Eth
     axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
     mxu_eff=0.40,
@@ -105,6 +121,7 @@ T4_16G = Hardware(
     peak_flops=65e12,
     hbm_bw=300e9,
     hbm_bytes=16 * 2**30,
+    vmem_bytes=6 * 2**20,                     # Turing SMEM+L2 working set
     link_bw={"fast": 16e9, "slow": 35e9 / 8 / 2},   # PCIe3 x16 vs shared Eth
     axis_kind={"data": "slow", "model": "fast", "stage": "fast"},
     mxu_eff=0.40,

@@ -154,6 +154,11 @@ class ExecutionPlan:
     rules: ShardingRules
     strategy: StrategySpec
     placement: Any = None           # hetero.HeteroPlacement | None
+    # per-DeviceGroup fused-kernel tile geometry ({group name → KernelTiles},
+    # from repro.kernels.autotune): populated whenever the plan was compiled
+    # against a ClusterSpec, so a V100 group and a P100 group in one job run
+    # the same kernels with different block sizes.  None → library defaults.
+    kernel_tiles: dict | None = None
 
     def __post_init__(self):
         self.param_axes = self.model.axes()
@@ -162,6 +167,24 @@ class ExecutionPlan:
         self.param_specs = self.rules.param_specs_tree(
             self.param_axes, self.param_shapes, fsdp=fsdp)
         self.param_shardings = _ns(self.mesh, self.param_specs)
+
+    def tiles_for(self, group: str | None = None):
+        """Autotuned :class:`~repro.kernels.autotune.KernelTiles` for one
+        device group (or, with ``group=None``, the *smallest* tiling across
+        groups — the safe choice for a single SPMD program that every part
+        must be able to run)."""
+        from repro.kernels.autotune import DEFAULT_TILES
+        if not self.kernel_tiles:
+            return DEFAULT_TILES
+        if group is not None:
+            return self.kernel_tiles.get(group, DEFAULT_TILES)
+        tiles = list(self.kernel_tiles.values())
+        lo = tiles[0]
+        for t in tiles[1:]:
+            lo = dataclasses.replace(
+                lo, **{f.name: min(getattr(lo, f.name), getattr(t, f.name))
+                       for f in dataclasses.fields(lo)})
+        return lo
 
     # ---- shardings for aux trees ----
     def batch_specs(self, batch_tree):
@@ -440,8 +463,18 @@ def compile_plan(model, mesh: Mesh, strategy: StrategySpec | None = None,
         from repro.core.hetero import plan_placement
         placement = plan_placement(workload_meta, strategy, cluster_spec,
                                    overlap=overlap)
+    kernel_tiles = None
+    if cluster_spec is not None:
+        from repro.kernels.autotune import autotune_cluster
+        cfg = getattr(model, "cfg", None)
+        if cfg is not None and getattr(cfg, "n_heads", 0):
+            kernel_tiles = autotune_cluster(
+                cluster_spec, head_dim=cfg.hd,
+                group=cfg.n_heads // max(cfg.n_kv_heads, 1),
+                d_model=cfg.d_model, vocab=cfg.padded_vocab)
     return ExecutionPlan(model=model, mesh=mesh, rules=rules,
-                         strategy=strategy, placement=placement)
+                         strategy=strategy, placement=placement,
+                         kernel_tiles=kernel_tiles)
 
 
 def compile_plan_from_cluster(cluster: Cluster, model,

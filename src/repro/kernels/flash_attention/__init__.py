@@ -1,2 +1,4 @@
-from repro.kernels.flash_attention.flash import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.flash import (  # noqa: F401
+    flash_attention, flash_attention_bwd)
+from repro.kernels.flash_attention.ops import flash  # noqa: F401
 from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401

@@ -1,4 +1,4 @@
-"""Pallas TPU flash attention (forward): blocked online-softmax, causal GQA.
+"""Pallas TPU flash attention: blocked online-softmax, causal GQA, fwd + bwd.
 
 TPU-native design (DESIGN.md §7):
 
@@ -19,9 +19,24 @@ TPU-native design (DESIGN.md §7):
   index — the "wedge"), matching the ~2× FLOP saving of the ref ``wedge``
   path.
 
+Backward (training path — PR 6): the standard recompute-style flash
+backward.  The forward additionally emits the per-row log-sum-exp; the
+backward never sees a stored (Sq, Sk) score matrix — each of its two
+kernels *recomputes* the score tile from (q, k, lse) in VMEM:
+
+- ``_flash_bwd_dq_kernel``: grid (B, K, nq), same wedge as the forward.
+  Per q block: loop kv blocks, p = exp(s − lse), dp = do·vᵀ,
+  ds = p·(dp − δ), dq += τ·ds·k.
+- ``_flash_bwd_dkv_kernel``: grid (B, K, nk).  Per kv block: loop the q
+  blocks that attend it (causal ⇒ start at ⌊j·bk/bq⌋), accumulate
+  dv += pᵀ·do and dk += τ·dsᵀ·q in VMEM and write each tile once.
+
+δ (= rowsum(do∘o)) is a cheap elementwise reduction computed by the
+wrapper; the custom VJP that saves/recomputes residuals lives in ops.py.
+
 Validated in ``interpret=True`` mode on CPU against ``ref.attention_ref``
-over shape/dtype sweeps (tests/test_kernels.py); on-TPU the same code lowers
-to Mosaic.
+(values AND gradients — tests/kernel_harness.py); on-TPU the same code
+lowers to Mosaic.
 """
 from __future__ import annotations
 
@@ -34,14 +49,14 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_q: int,
                       block_k: int, causal: bool, sk: int, group: int,
                       head_dim: int):
     """One (batch, kv-head, q-block) program.
 
     q_ref: (block_q, G·D) VMEM tile
     k_ref/v_ref: (Sk, D) VMEM rows for this (b, kv-head)
-    o_ref: (block_q, G·D)
+    o_ref: (block_q, G·D)   lse_ref: (block_q, G)
     """
     qi = pl.program_id(2)
     G, D = group, head_dim
@@ -87,24 +102,132 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int,
     m, l, acc = jax.lax.fori_loop(0, nk, body, (m0, l0, a0))
     out = acc / jnp.maximum(l, 1e-30)[:, None]
     o_ref[...] = out.reshape(block_q, G * D).astype(o_ref.dtype)
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    lse_ref[...] = lse.reshape(block_q, G)
 
 
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, block_q: int = 128,
-                    block_k: int = 128, interpret: bool = False) -> jax.Array:
-    """q: (B, Sq, H, D)  k/v: (B, Sk, K, D) → (B, Sq, H, D).
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref, dq_ref,
+                         *, block_q: int, block_k: int, causal: bool,
+                         sk: int, group: int, head_dim: int):
+    """dQ program (batch, kv-head, q-block): recompute score tiles, wedge.
 
-    Forward only (serving prefill / benchmark path; training uses the
-    jnp blocked ref whose backward comes from autodiff).
+    q_ref/do_ref: (block_q, G·D)  k_ref/v_ref: (Sk, D)
+    lse_ref/d_ref: (block_q, G)   dq_ref: (block_q, G·D)
     """
-    B, Sq, H, D = q.shape
-    Sk, K = k.shape[1], k.shape[2]
-    G = H // K
+    qi = pl.program_id(2)
+    G, D = group, head_dim
+    scale = D ** -0.5
+    q2 = q_ref[...].reshape(block_q * G, D).astype(jnp.float32)
+    do2 = do_ref[...].reshape(block_q * G, D).astype(jnp.float32)
+    lse = lse_ref[...].reshape(block_q * G)
+    delta = d_ref[...].reshape(block_q * G)
+
+    nk_total = sk // block_k
+    if causal:
+        nk = jnp.minimum(((qi + 1) * block_q + block_k - 1) // block_k,
+                         nk_total)
+    else:
+        nk = nk_total
+
+    def body(j, dq):
+        kj = k_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        vj = v_ref[pl.dslice(j * block_k, block_k), :].astype(jnp.float32)
+        s = jax.lax.dot_general(q2, kj, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, G), 0).reshape(block_q * G)
+            kpos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q * G, block_k), 1)
+            s = jnp.where(qpos[:, None] >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])                 # masked rows → exp(−∞)=0
+        dp = jax.lax.dot_general(do2, vj, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        return dq + jax.lax.dot_general(ds, kj, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    dq0 = jnp.zeros((block_q * G, D), jnp.float32)
+    dq = jax.lax.fori_loop(0, nk, body, dq0) * scale
+    dq_ref[...] = dq.reshape(block_q, G * D).astype(dq_ref.dtype)
+
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, d_ref,
+                          dk_ref, dv_ref, *, block_q: int, block_k: int,
+                          causal: bool, sq: int, group: int, head_dim: int):
+    """dK/dV program (batch, kv-head, kv-block): loop live q blocks.
+
+    q_ref/do_ref: (Sq, G·D)  k_ref/v_ref: (block_k, D)
+    lse_ref/d_ref: (Sq, G)   dk_ref/dv_ref: (block_k, D)
+    """
+    ki = pl.program_id(2)
+    G, D = group, head_dim
+    scale = D ** -0.5
+    kj = k_ref[...].astype(jnp.float32)
+    vj = v_ref[...].astype(jnp.float32)
+    nq_total = sq // block_q
+    # causal: the first q block with any row attending this kv block is
+    # ⌊ki·bk/bq⌋ (rows before it all precede the block's first kv position)
+    i0 = (ki * block_k) // block_q if causal else 0
+
+    def body(i, carry):
+        dk, dv = carry
+        qi = q_ref[pl.dslice(i * block_q, block_q), :] \
+            .reshape(block_q * G, D).astype(jnp.float32)
+        doi = do_ref[pl.dslice(i * block_q, block_q), :] \
+            .reshape(block_q * G, D).astype(jnp.float32)
+        lse = lse_ref[pl.dslice(i * block_q, block_q), :] \
+            .reshape(block_q * G)
+        delta = d_ref[pl.dslice(i * block_q, block_q), :] \
+            .reshape(block_q * G)
+        s = jax.lax.dot_general(qi, kj, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, G), 0).reshape(block_q * G)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q * G, block_k), 1)
+            s = jnp.where(qpos[:, None] >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv = dv + jax.lax.dot_general(p, doi, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(doi, vj, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None])
+        dk = dk + jax.lax.dot_general(ds, qi, (((0,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+        return dk, dv
+
+    z = jnp.zeros((block_k, D), jnp.float32)
+    dk, dv = jax.lax.fori_loop(i0, nq_total, body, (z, z))
+    dk_ref[...] = (dk * scale).astype(dk_ref.dtype)
+    dv_ref[...] = dv.astype(dv_ref.dtype)
+
+
+def _check_blocks(Sq: int, Sk: int, block_q: int, block_k: int):
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     if Sq % block_q or Sk % block_k:
         raise ValueError(f"seq ({Sq},{Sk}) must divide blocks "
                          f"({block_q},{block_k})")
+    return block_q, block_k
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False,
+                    return_lse: bool = False):
+    """q: (B, Sq, H, D)  k/v: (B, Sk, K, D) → (B, Sq, H, D).
+
+    ``return_lse``: additionally return the per-row log-sum-exp
+    (B, Sq, K, G) — the residual the fused backward needs.  Training code
+    should go through :func:`repro.kernels.flash_attention.ops.flash`,
+    whose custom VJP runs the fused backward kernels.
+    """
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_q, block_k = _check_blocks(Sq, Sk, block_q, block_k)
     nq = Sq // block_q
 
     # layout: (B, S, K, G·D) so one BlockSpec index_map serves q and o
@@ -114,7 +237,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         _flash_fwd_kernel, block_q=block_q, block_k=block_k, causal=causal,
         sk=Sk, group=G, head_dim=D)
 
-    out = pl.pallas_call(
+    out, lse = pl.pallas_call(
         kernel,
         grid=(B, K, nq),
         in_specs=[
@@ -123,9 +246,72 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((None, Sk, None, D), lambda b, h, i: (b, 0, h, 0)),
             pl.BlockSpec((None, Sk, None, D), lambda b, h, i: (b, 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((None, block_q, None, G * D),
-                               lambda b, h, i: (b, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, Sq, K, G * D), q.dtype),
+        out_specs=(
+            pl.BlockSpec((None, block_q, None, G * D),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, block_q, None, G),
+                         lambda b, h, i: (b, i, h, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Sq, K, G * D), q.dtype),
+            jax.ShapeDtypeStruct((B, Sq, K, G), jnp.float32),
+        ),
         interpret=interpret,
     )(qr, k, v)
-    return out.reshape(B, Sq, H, D)
+    out = out.reshape(B, Sq, H, D)
+    return (out, lse) if return_lse else out
+
+
+def flash_attention_bwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        do: jax.Array, lse: jax.Array, delta: jax.Array, *,
+                        causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """Fused flash backward: (dq, dk, dv) from saved (q, k, v, lse, δ).
+
+    q/do: (B, Sq, H, D)  k/v: (B, Sk, K, D)  lse/delta: (B, Sq, K, G).
+    Score tiles are recomputed in VMEM — no (Sq, Sk) tensor ever exists.
+    """
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_q, block_k = _check_blocks(Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+
+    qr = q.reshape(B, Sq, K, G * D)
+    dor = do.reshape(B, Sq, K, G * D)
+
+    q_tile = pl.BlockSpec((None, block_q, None, G * D),
+                          lambda b, h, i: (b, i, h, 0))
+    row_tile = pl.BlockSpec((None, block_q, None, G),
+                            lambda b, h, i: (b, i, h, 0))
+    kv_rows = pl.BlockSpec((None, Sk, None, D), lambda b, h, i: (b, 0, h, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_flash_bwd_dq_kernel, block_q=block_q,
+                          block_k=block_k, causal=causal, sk=Sk, group=G,
+                          head_dim=D),
+        grid=(B, K, nq),
+        in_specs=[q_tile, kv_rows, kv_rows, q_tile, row_tile, row_tile],
+        out_specs=q_tile,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, K, G * D), q.dtype),
+        interpret=interpret,
+    )(qr, k, v, dor, lse, delta)
+
+    q_rows = pl.BlockSpec((None, Sq, None, G * D),
+                          lambda b, h, j: (b, 0, h, 0))
+    rows_full = pl.BlockSpec((None, Sq, None, G), lambda b, h, j: (b, 0, h, 0))
+    kv_tile = pl.BlockSpec((None, block_k, None, D),
+                           lambda b, h, j: (b, j, h, 0))
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_flash_bwd_dkv_kernel, block_q=block_q,
+                          block_k=block_k, causal=causal, sq=Sq, group=G,
+                          head_dim=D),
+        grid=(B, K, nk),
+        in_specs=[q_rows, kv_tile, kv_tile, q_rows, rows_full, rows_full],
+        out_specs=(kv_tile, kv_tile),
+        out_shape=(jax.ShapeDtypeStruct((B, Sk, K, D), k.dtype),
+                   jax.ShapeDtypeStruct((B, Sk, K, D), v.dtype)),
+        interpret=interpret,
+    )(qr, k, v, dor, lse, delta)
+    return dq.reshape(B, Sq, H, D), dk, dv

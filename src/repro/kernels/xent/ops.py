@@ -64,3 +64,61 @@ def _bwd(vocab, block_t, block_v, interpret, res, g):
 
 
 xent.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def xent_with_lse(hidden, head_w, labels, vocab=None, block_t=128,
+                  block_v=512, interpret=False):
+    """Like :func:`xent` but also returns lse (T,) — differentiably.
+
+    The LM loss needs lse for the z-loss term (z = lse² regulariser), so
+    both outputs carry cotangents.  With g = (g_nll, g_lse):
+
+        d_logits = g_nll·(softmax − onehot) + g_lse·softmax
+
+    computed with the same recompute-over-vocab-tiles loop as :func:`xent`.
+    """
+    return xent_fwd(hidden, head_w, labels, vocab=vocab, block_t=block_t,
+                    block_v=block_v, interpret=interpret)
+
+
+def _fwd_lse(hidden, head_w, labels, vocab, block_t, block_v, interpret):
+    nll, lse = xent_fwd(hidden, head_w, labels, vocab=vocab, block_t=block_t,
+                        block_v=block_v, interpret=interpret)
+    return (nll, lse), (hidden, head_w, labels, lse)
+
+
+def _bwd_lse(vocab, block_t, block_v, interpret, res, g):
+    hidden, head_w, labels, lse = res
+    g_nll, g_lse = g
+    T, E = hidden.shape
+    V = head_w.shape[1]
+    vocab_ = vocab or V
+    nvc = max(V // max(block_v, 1), 1)
+    chunk = V // nvc
+    hf = hidden.astype(jnp.float32)
+    col0 = jnp.arange(chunk)
+    g_nll = g_nll.astype(jnp.float32)
+    g_lse = g_lse.astype(jnp.float32)
+
+    def tile(i, carry):
+        dh, dw = carry
+        w_t = jax.lax.dynamic_slice(head_w, (0, i * chunk), (E, chunk)) \
+            .astype(jnp.float32)
+        logits = hf @ w_t
+        col = col0[None, :] + i * chunk
+        p = jnp.where(col < vocab_,
+                      jnp.exp(logits - lse[:, None]), 0.0)       # softmax tile
+        onehot = jnp.where(col == labels[:, None], 1.0, 0.0)
+        d = g_nll[:, None] * (p - onehot) + g_lse[:, None] * p
+        dh = dh + d @ w_t.T
+        dw = jax.lax.dynamic_update_slice(dw, hf.T @ d, (0, i * chunk))
+        return dh, dw
+
+    dh0 = jnp.zeros((T, E), jnp.float32)
+    dw0 = jnp.zeros((E, V), jnp.float32)
+    dh, dw = jax.lax.fori_loop(0, nvc, tile, (dh0, dw0))
+    return dh.astype(hidden.dtype), dw.astype(head_w.dtype), None
+
+
+xent_with_lse.defvjp(_fwd_lse, _bwd_lse)

@@ -367,6 +367,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--distributed", action="store_true")
     ap.add_argument("--overrides", default="",
                     help="comma k=v LMCfg overrides (e.g. n_layers=4)")
+    # ---- fused-kernel selection (PR 6: training-grade pallas paths) ----
+    ap.add_argument("--attn", choices=("ref", "pallas"), default=None,
+                    help="attention impl: pallas = fused flash fwd+bwd "
+                         "(interpret-mode off-TPU); default: config's choice")
+    ap.add_argument("--xent", choices=("ref", "pallas"), default=None,
+                    help="loss head impl: pallas = fused xent kernel")
+    ap.add_argument("--hw", choices=("tpu_v5e", "v100", "p100", "t4"),
+                    default="tpu_v5e",
+                    help="Hardware table the kernel-tile autotuner targets "
+                         "(repro.kernels.autotune)")
     # ---- self-healing elastic runtime (DESIGN.md §7) ----
     ap.add_argument("--hosts", type=int, default=0,
                     help="simulate N hosts over the visible devices and run "
@@ -395,6 +405,27 @@ def main(argv=None) -> dict:
             cur = getattr(cfg, k)
             kv[k] = type(cur)(v) if not isinstance(cur, bool) else v == "True"
         cfg = dataclasses.replace(cfg, **kv)
+    if args.attn:
+        cfg = dataclasses.replace(cfg, attn_impl=args.attn)
+    if args.xent:
+        cfg = dataclasses.replace(cfg, xent_impl=args.xent)
+    if "pallas" in (cfg.attn_impl, cfg.xent_impl, cfg.ssd_impl):
+        # size the kernel tiles for the target part (per-Hardware autotune);
+        # mixed clusters get per-group tiles on the plan via compile_plan
+        from repro.core import cost_model as _cm
+        from repro.kernels.autotune import autotune
+        hw = {"tpu_v5e": _cm.TPU_V5E, "v100": _cm.V100_PAPER,
+              "p100": _cm.P100_16G, "t4": _cm.T4_16G}[args.hw]
+        tiles = autotune(
+            hw, head_dim=cfg.hd if cfg.n_heads else cfg.ssd_headdim,
+            group=cfg.n_heads // max(cfg.n_kv_heads, 1) or 1,
+            d_model=cfg.d_model, vocab=cfg.padded_vocab, seq=args.seq)
+        cfg = dataclasses.replace(
+            cfg, attn_block_q=tiles.block_q, attn_block_k=tiles.block_k,
+            xent_block_t=tiles.xent_block_t, xent_block_v=tiles.xent_block_v,
+            ssd_chunk=(tiles.ssd_chunk if cfg.family in ("ssm", "hybrid")
+                       else cfg.ssd_chunk))
+        print(f"[autotune] {hw.name}: {tiles}")
     from repro.models.lm import build, param_count
     model = build(cfg)
 

@@ -118,10 +118,20 @@ def _blocked_gqa(q, k, v, *, causal: bool, block_q: int, block_k: int,
     """
     B, Sq, K, G, D = q.shape
     Sk = k.shape[1]
-    nq = max(Sq // block_q, 1)
-    block_q = Sq // nq
-    nk = max(Sk // block_k, 1)
-    block_k = Sk // nk
+    # a block larger than the sequence is benign (one block); a block that
+    # does not DIVIDE the sequence is not — silently rewriting it changed
+    # the user's tiling (and FLOP/memory profile) behind their back.  Match
+    # the PR 3 truncated-reshape precedent: fail loudly instead.
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(
+            f"block_q/block_k ({block_q}, {block_k}) must divide the "
+            f"sequence lengths ({Sq}, {Sk}); pick dividing blocks (e.g. via "
+            f"repro.kernels.autotune.fit_block) instead of relying on "
+            f"silent rounding")
+    nq = Sq // block_q
+    nk = Sk // block_k
     scale = 1.0 / (D ** 0.5)
 
     qb = q.reshape(B, nq, block_q, K, G, D)
@@ -188,9 +198,11 @@ def attention(params: dict, x: jax.Array, positions: jax.Array, cfg: AttnCfg,
     """x: (B, S, E) → (B, S, E); optionally also the (B, S, K, D) kv tensors.
 
     ``impl="pallas"``: the score/softmax/value core runs in the Pallas flash
-    kernel (forward-only — use for prefill/serving; training keeps the
-    blocked jnp path whose backward comes from autodiff).
-    ``bwd_remat``: flash-style backward (recompute score tiles)."""
+    kernel, fwd AND bwd — the kernel carries a custom VJP whose backward
+    recomputes score tiles in VMEM (training-grade since PR 6).
+    ``bwd_remat``: flash-style backward residual policy — recompute ``o``
+    from (q, k, v, lse) in the backward instead of saving it (pallas path),
+    or checkpoint the kv-block scan step (ref path)."""
     B, S, E = x.shape
     K, G, D = cfg.n_kv_heads, cfg.group, cfg.head_dim
     layout = choose_layout(cfg)
@@ -228,12 +240,12 @@ def attention(params: dict, x: jax.Array, positions: jax.Array, cfg: AttnCfg,
     v = constrain(v, kv_names)
 
     if impl == "pallas":
-        from repro.kernels.flash_attention import flash_attention
+        from repro.kernels.flash_attention import flash
         Bq, Sq, Kq, Gq, Dq = qg.shape
-        out = flash_attention(
-            qg.reshape(Bq, Sq, Kq * Gq, Dq), k, v, causal=cfg.causal,
-            block_q=min(block_q, 128), block_k=min(block_k, 128),
-            interpret=jax.default_backend() != "tpu",
+        out = flash(
+            qg.reshape(Bq, Sq, Kq * Gq, Dq), k, v, cfg.causal,
+            min(block_q, Sq), min(block_k, S),
+            jax.default_backend() != "tpu", bwd_remat,
         ).reshape(Bq, Sq, Kq, Gq, Dq).astype(jnp.float32)
     else:
         out = _blocked_gqa(qg, k, v, causal=cfg.causal,

@@ -80,10 +80,14 @@ class LMCfg:
     loss_chunk: int = 512
     vocab_pad_multiple: int = 256
     z_loss_coef: float = 1e-4
-    # kernel selection: "ref" (pure jnp — CPU dry-run / training) or
-    # "pallas" (TPU kernels; attention pallas path is fwd-only → serving)
+    # kernel selection: "ref" (pure jnp — CPU dry-run) or "pallas" (fused
+    # kernels, fwd AND bwd via custom VJPs — training-grade since PR 6;
+    # interpret-mode on CPU, Mosaic on TPU)
     attn_impl: str = "ref"
     ssd_impl: str = "ref"
+    xent_impl: str = "ref"          # loss head: chunked jnp vs fused kernel
+    xent_block_t: int = 128         # fused-xent token tile
+    xent_block_v: int = 512         # fused-xent vocab tile
     attn_bwd_remat: bool = False    # flash-style attention backward
     kv_cache_dtype: str = "bfloat16"  # "int8": quantised serving KV cache
     # cast f32 master params to the compute dtype ONCE at step entry, so
@@ -232,6 +236,34 @@ def chunked_xent(hidden: jax.Array, head_w: jax.Array, labels: jax.Array,
     return s_nll, z_loss_coef * s_zl, s_n
 
 
+def fused_xent(hidden: jax.Array, head_w: jax.Array, labels: jax.Array,
+               mask: jax.Array, *, vocab: int, block_t: int = 128,
+               block_v: int = 512, z_loss_coef: float = 0.0,
+               interpret: bool | None = None):
+    """Pallas fused-kernel twin of :func:`chunked_xent` (same contract).
+
+    One kernel launch streams (E, Vp) head tiles through VMEM and never
+    materialises a logits tensor at all; nll AND lse come back together so
+    the z-loss term differentiates through the same recompute-over-vocab
+    backward (``kernels.xent.ops.xent_with_lse``).
+    """
+    from repro.kernels.autotune import fit_block
+    from repro.kernels.xent.ops import xent_with_lse
+    B, T, E = hidden.shape
+    Vp = head_w.shape[1]
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    h2 = hidden.reshape(B * T, E)
+    l2 = labels.reshape(B * T)
+    m2 = mask.reshape(B * T).astype(jnp.float32)
+    bt = fit_block(B * T, block_t)
+    bv = fit_block(Vp, block_v)
+    nll, lse = xent_with_lse(h2, head_w, l2, vocab, bt, bv, interpret)
+    s_nll = jnp.sum(nll * m2)
+    s_zl = jnp.sum(jnp.square(lse) * m2)
+    return s_nll, z_loss_coef * s_zl, m2.sum()
+
+
 # ---------------------------------------------------------------------------
 # the model object
 # ---------------------------------------------------------------------------
@@ -314,6 +346,18 @@ class Model:
         return jax.tree.map(
             lambda p: p.astype(adt) if p.dtype == jnp.float32 else p, params)
 
+    def _xent(self, hidden, head_w, labels, mask):
+        """Loss-head dispatch: chunked jnp scan vs the fused Pallas kernel."""
+        cfg = self.cfg
+        if cfg.xent_impl == "pallas":
+            return fused_xent(hidden, head_w, labels, mask, vocab=cfg.vocab,
+                              block_t=cfg.xent_block_t,
+                              block_v=cfg.xent_block_v,
+                              z_loss_coef=cfg.z_loss_coef)
+        return chunked_xent(hidden, head_w, labels, mask, vocab=cfg.vocab,
+                            chunk=cfg.loss_chunk,
+                            z_loss_coef=cfg.z_loss_coef)
+
     # ---- training ----
     def loss_fn(self, params, batch) -> tuple[jax.Array, dict]:
         cfg = self.cfg
@@ -333,9 +377,8 @@ class Model:
         if cfg.family == "vlm":
             tgt_pos = jnp.arange(1, S)[None]
             mask = mask * (tgt_pos >= cfg.frontend_len)
-        nll, zl, n = chunked_xent(
-            x[:, :-1], self._head_w(params).astype(cfg.adtype), labels, mask,
-            vocab=cfg.vocab, chunk=cfg.loss_chunk, z_loss_coef=cfg.z_loss_coef)
+        nll, zl, n = self._xent(
+            x[:, :-1], self._head_w(params).astype(cfg.adtype), labels, mask)
         loss = nll / jnp.maximum(n, 1.0) + zl / jnp.maximum(n, 1.0) \
             + aux["lb_loss"] + aux["z_loss"]
         metrics = {"nll": nll / jnp.maximum(n, 1.0), "tokens": n,
@@ -354,9 +397,8 @@ class Model:
         x = layers.make_norm(cfg.norm)[2](params["final_norm"], x)
         labels = tokens[:, 1:]
         mask = jnp.ones_like(labels, jnp.float32)
-        nll, zl, n = chunked_xent(
-            x, self._head_w(params).astype(cfg.adtype), labels, mask,
-            vocab=cfg.vocab, chunk=cfg.loss_chunk, z_loss_coef=cfg.z_loss_coef)
+        nll, zl, n = self._xent(
+            x, self._head_w(params).astype(cfg.adtype), labels, mask)
         loss = (nll + zl) / jnp.maximum(n, 1.0)
         return loss, {"nll": nll / jnp.maximum(n, 1.0), "tokens": n,
                       "moe_lb": jnp.zeros(()), "moe_z": jnp.zeros(())}

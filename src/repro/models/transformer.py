@@ -56,7 +56,7 @@ class StackCfg:
     attn_block_q: int = 512
     attn_block_k: int = 512
     attn_wedge: bool = False              # causal block skipping (perf opt)
-    attn_impl: str = "ref"                # "ref" | "pallas" (fwd-only)
+    attn_impl: str = "ref"                # "ref" | "pallas" (fwd+bwd fused)
     ssd_impl: str = "ref"                 # "ref" | "pallas"
     attn_bwd_remat: bool = False          # flash-style backward (perf opt)
     kv_cache_dtype: str = "bfloat16"      # "bfloat16" | "int8" (serving opt)

@@ -1,0 +1,104 @@
+"""Shared fwd+bwd gradcheck harness for the Pallas kernel families.
+
+The kernel analogue of PR 3's schedule-equivalence harness: every kernel
+family is checked against its ``ref.py`` oracle *both ways* —
+
+- **values**: kernel outputs (run in ``interpret=True`` on CPU) allclose
+  to the full-materialisation reference, and
+- **gradients**: for a random cotangent ``ct``, the VJP of
+  ``vdot(kernel(·), ct)`` allclose to autodiff through the reference —
+  this exercises the hand-written ``jax.custom_vjp`` backward kernels
+  (flash dq/dkv, xent recompute-over-vocab) against ground truth.
+
+Tolerance policy (per compute dtype of the *inputs*; kernels accumulate
+in f32 regardless):
+
+- f32 inputs: 2e-5 on values.  Gradients get 10× headroom (2e-4):
+  the backward recomputes ``p = exp(s − lse)`` rather than reusing the
+  forward's online-softmax factors, so fwd and bwd see differently-rounded
+  probabilities.
+- bf16 inputs: 2e-2 / 5e-2 — one bf16 ulp at the magnitudes the sweeps
+  produce, again with bwd headroom.
+
+Two families are exempt from kernel-side gradcheck by design, and their
+tests say so: the SSD pallas scan uses scratch accumulators (``pallas_call``
+is not differentiable; training runs the chunked jnp twin in
+``models.mamba2.ssd_scan``, whose autodiff IS checked against the
+sequential oracle here), and quant is inherently non-differentiable
+(value/roundtrip properties only).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Tol:
+    fwd: float
+    grad: float
+
+
+TOLS = {
+    jnp.dtype(jnp.float32): Tol(fwd=2e-5, grad=2e-4),
+    jnp.dtype(jnp.bfloat16): Tol(fwd=2e-2, grad=5e-2),
+}
+
+
+def tol_for(dtype) -> Tol:
+    return TOLS[jnp.dtype(dtype)]
+
+
+def _tree_vdot(a, b):
+    return sum(jnp.vdot(x.astype(jnp.float32), y.astype(jnp.float32))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def assert_tree_close(got, want, tol: float, msg: str = ""):
+    for i, (g, w) in enumerate(zip(jax.tree.leaves(got),
+                                   jax.tree.leaves(want))):
+        np.testing.assert_allclose(
+            np.asarray(g, np.float32), np.asarray(w, np.float32),
+            atol=tol, rtol=tol, err_msg=f"{msg} [leaf {i}]")
+
+
+def check_fwd_bwd(kernel_fn, ref_fn, args: tuple, *, diff_argnums: tuple,
+                  tol: Tol, seed: int = 0, msg: str = ""):
+    """Assert kernel_fn ≡ ref_fn on ``args``, values AND gradients.
+
+    ``kernel_fn``/``ref_fn``: called as ``fn(*args)``; outputs may be any
+    pytree (compared leaf-wise).  ``diff_argnums``: positions of the args
+    to differentiate (the rest are closed over).  Gradients are compared
+    through a random-cotangent scalarisation, which checks the full VJP
+    rather than one directional derivative.
+    """
+    out_k = kernel_fn(*args)
+    out_r = ref_fn(*args)
+    assert_tree_close(out_k, out_r, tol.fwd, msg=f"{msg} fwd")
+
+    key = jax.random.key(seed)
+    leaves = jax.tree.leaves(out_r)
+    cts = [jax.random.normal(jax.random.fold_in(key, i), leaf.shape,
+                             jnp.float32)
+           for i, leaf in enumerate(leaves)]
+
+    def scalar(fn):
+        def s(*diff):
+            full = list(args)
+            for pos, val in zip(diff_argnums, diff):
+                full[pos] = val
+            return _tree_vdot(fn(*full), cts)
+        return s
+
+    diff = tuple(args[i] for i in diff_argnums)
+    g_k = jax.grad(scalar(kernel_fn), argnums=tuple(range(len(diff))))(*diff)
+    g_r = jax.grad(scalar(ref_fn), argnums=tuple(range(len(diff))))(*diff)
+    for pos, gk, gr in zip(diff_argnums, g_k, g_r):
+        assert_tree_close(gk, gr, tol.grad, msg=f"{msg} grad(arg{pos})")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
