@@ -1,7 +1,7 @@
 """CI benchmark-regression gate: run the analytic benchmarks, record the
 headline numbers, fail on regression below the recorded floors.
 
-    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR6.json]
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR7.json]
 
 The analytic (cost-model / simulated-clock) benchmarks are deterministic —
 pure arithmetic over hardware tables, no execution, no timing noise — so
@@ -28,14 +28,19 @@ floor:
     kernel_ssd_speedup_min   >= 5.0   (chunked scan vs quadratic, any part)
     kernel_xent_footprint_min >= 5.0  (fused loss-head live bytes vs the
                                        chunked ref's logits block)
+    serve_tokens_per_s_ratio >= 1.3   (paged+disagg vs dense colocated
+                                       tokens/s on the 8×V100+8×T4
+                                       flagship, benchmarks.fig_serve)
 
 Floors are deliberately below the current values (2.77 / 2.66 / 1.98 /
-2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8) so legitimate refinements have
-headroom, while a change that destroys a headline win (the balancer, the
-schedule memory model, the ep pricing, the eviction loop, the kernel
-tiling/autotuner) fails the ``bench`` CI job loudly.  The kernel section
-additionally gates numerics (interpret-mode max |err| vs oracle) and the
-static VMEM budget as structural invariants.
+2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51) so legitimate refinements
+have headroom, while a change that destroys a headline win (the balancer,
+the schedule memory model, the ep pricing, the eviction loop, the kernel
+tiling/autotuner, the serving router/simulator) fails the ``bench`` CI
+job loudly.  The kernel section additionally gates numerics
+(interpret-mode max |err| vs oracle) and the static VMEM budget as
+structural invariants; the serving section additionally gates p99 TTFT
+(disagg ≤ colocated) and parity on the prefill-heavy scenario.
 """
 from __future__ import annotations
 
@@ -53,6 +58,7 @@ FLOORS = {
     "kernel_flash_speedup_min": 1.0,
     "kernel_ssd_speedup_min": 5.0,
     "kernel_xent_footprint_min": 5.0,
+    "serve_tokens_per_s_ratio": 1.3,
 }
 
 
@@ -100,6 +106,15 @@ def collect() -> dict:
         name: {k: v for k, v in r.items() if k != "scenario"}
         for name, r in fe["per_scenario"].items()}
 
+    # ---- fig_serve: paged + disaggregated serving (analytic sim);
+    # strict=False for the same record-then-gate reason as fig_elastic ----
+    import benchmarks.fig_serve as fig_serve
+    fs = fig_serve.main(csv=False, strict=False)
+    out["serve_tokens_per_s_ratio"] = fs["serve_tokens_per_s_ratio"]
+    out["serve_ttft_p99_ratio"] = fs["serve_ttft_p99_ratio"]
+    out["serve_tokens_per_s_ratio_all"] = fs["serve_tokens_per_s_ratio_all"]
+    out["serve_per_scenario"] = fs["per_scenario"]
+
     # ---- kernel speed pass: roofline speedups + interpret numerics ----
     import benchmarks.kernel_bench as kb
     rl = kb.roofline()
@@ -144,12 +159,21 @@ def gate(metrics: dict) -> list:
     if metrics.get("kernel_vmem_max_kib", 1e9) >= 16 * 1024:
         failures.append("a kernel tile working set exceeds the 16 MiB "
                         "VMEM budget (kernel_vmem_max_kib)")
+    # the throughput win must not be bought with a latency regression:
+    # p99 TTFT of the disaggregated arm stays no worse than colocated
+    if metrics.get("serve_ttft_p99_ratio", 1e9) > 1.0:
+        failures.append("disaggregated serving regressed p99 TTFT vs the "
+                        "colocated baseline (serve_ttft_p99_ratio > 1.0)")
+    if metrics.get("serve_tokens_per_s_ratio_all", 0.0) < 0.95:
+        failures.append("a serving scenario collapsed below parity with "
+                        "the colocated baseline "
+                        "(serve_tokens_per_s_ratio_all < 0.95)")
     return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR6.json")
+    ap.add_argument("--out", default="BENCH_PR7.json")
     args = ap.parse_args(argv)
     metrics = collect()
     with open(args.out, "w") as f:

@@ -10,6 +10,7 @@ Sections:
   fig7      hardware-aware vs naive split on mixed GPUs  (paper §5)
   fig9      M6 recipe: nested replica{split[experts]} vs flat DP (paper §4)
   elastic   self-healing straggler eviction vs naive        (paper §5)
+  serve     paged + disaggregated serving vs dense colocated (DESIGN.md §9)
   kernels   Pallas kernel numerics vs oracle + VMEM budget
   roofline  per-(arch × shape × mesh) table from the dry-run JSONL
 
@@ -65,6 +66,11 @@ def main() -> None:
     print("== elastic: self-healing eviction vs naive straggler (§5) ==")
     import benchmarks.fig_elastic as fig_elastic
     fig_elastic.main()
+
+    print("=" * 72)
+    print("== serve: paged + disaggregated vs dense colocated (§9) ==")
+    import benchmarks.fig_serve as fig_serve
+    fig_serve.main()
 
     print("=" * 72)
     print("== kernels: Pallas vs oracle ==")

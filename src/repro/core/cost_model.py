@@ -628,3 +628,115 @@ def lm_workload_meta(cfg, batch: int, seq: int,
         n_moe_layers=int(n_moe),
         expert_param_bytes=float(expert_param_bytes),
         moe_dispatch_bytes=float(moe_dispatch_bytes))
+
+
+# ---------------------------------------------------------------------------
+# serving (inference) pricing: prefill is FLOPs-bound, decode is HBM-bound
+# ---------------------------------------------------------------------------
+#
+# The training cost above prices one *synchronous step*; serving needs two
+# different per-group quantities (DESIGN.md §9, the HexiScale lens):
+#
+# - **prefill**: one prompt's forward is a dense matmul pass — compute-bound,
+#   so a group's prefill rate tracks its effective FLOP/s.
+# - **decode**: one token per sequence per step — every step re-reads the
+#   weights plus the live KV cache from HBM while doing ~2 FLOPs per byte,
+#   so a group's decode rate tracks its aggregate HBM bandwidth.
+#
+# Both are max(flops-term, bytes-term) rooflines on the same Hardware
+# tables the training model uses; the prefill/decode router
+# (repro.serving.router) prices cluster partitions with exactly these two
+# functions, which is what makes "prefill on the compute-rich pool, decode
+# on the bandwidth-rich pool" fall out of the tables instead of being
+# hard-coded.
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingMeta:
+    """Per-token metadata of one LM for inference pricing.
+
+    Like :class:`WorkloadMeta` everything is pure arithmetic over the
+    config — nothing is executed.  ``flops_per_token`` covers the linear
+    (weight) matmuls; attention-over-context adds
+    ``attn_flops_per_ctx_token`` per (new token × cached token) pair.
+    """
+    name: str
+    flops_per_token: float           # weight-matmul fwd FLOPs per token
+    attn_flops_per_ctx_token: float  # score+value FLOPs per context token
+    param_bytes: float               # serving weights (act dtype, e.g. bf16)
+    kv_bytes_per_token: float        # KV-cache bytes per cached token, all layers
+    d_model: int
+    n_layers: int
+
+
+def lm_serving_meta(cfg, *, param_dtype_bytes: int = 2,
+                    kv_dtype_bytes: int = 2) -> ServingMeta:
+    """Analytic serving metadata for one LMCfg (attention families)."""
+    E, L, hd = cfg.d_model, cfg.n_layers, cfg.hd
+    H, K, V = cfg.n_heads, cfg.n_kv_heads, cfg.padded_vocab
+    proj = 2 * E * (H * hd) + 2 * 2 * E * (K * hd) + 2 * (H * hd) * E
+    mlp = 2 * E * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+    head = 2 * E * V
+    flops_per_token = L * (proj + mlp) + head
+    # per (new token, cached token): one q·k dot + one p·v accumulate per head
+    attn_per_ctx = L * 2 * H * hd * 2
+    param_count = (L * (E * (H * hd) * 2 + E * (K * hd) * 2
+                        + E * cfg.d_ff * (3 if cfg.gated_mlp else 2))
+                   + V * E * (1 if cfg.tie_embeddings else 2))
+    kv_per_token = L * 2 * K * hd * kv_dtype_bytes
+    return ServingMeta(
+        name=cfg.name, flops_per_token=float(flops_per_token),
+        attn_flops_per_ctx_token=float(attn_per_ctx),
+        param_bytes=float(param_count * param_dtype_bytes),
+        kv_bytes_per_token=float(kv_per_token),
+        d_model=E, n_layers=L)
+
+
+def prefill_time(meta: ServingMeta, group: DeviceGroup,
+                 prompt_len: int, batch: int = 1) -> float:
+    """Wall time for one prefill of ``batch`` prompts on ``group``.
+
+    FLOPs-bound roofline: dense matmuls over the whole prompt, floored by
+    one streaming pass over the (group-sharded) weights.
+    """
+    T = batch * prompt_len
+    flops = T * meta.flops_per_token \
+        + batch * (prompt_len * prompt_len / 2) * meta.attn_flops_per_ctx_token
+    t_flops = flops / group.group_flops
+    t_bytes = meta.param_bytes / (group.n_devices * group.hw.hbm_bw)
+    return max(t_flops, t_bytes)
+
+
+def decode_step_time(meta: ServingMeta, group: DeviceGroup,
+                     active: int, ctx_tokens: float) -> float:
+    """Wall time of ONE decode step advancing ``active`` sequences on
+    ``group``, with ``ctx_tokens`` total KV-cache tokens *read* that step.
+
+    HBM-bound roofline: every step streams the weights plus the live KV.
+    ``ctx_tokens`` is where paged beats dense: a dense cache reads its
+    full ``slots × max_len`` reservation, a paged cache only the tokens
+    actually cached (the block table never materialises the gap pages).
+    """
+    if active <= 0:
+        return 0.0
+    bytes_ = meta.param_bytes + ctx_tokens * meta.kv_bytes_per_token
+    t_bytes = bytes_ / (group.n_devices * group.hw.hbm_bw)
+    flops = active * meta.flops_per_token \
+        + ctx_tokens * meta.attn_flops_per_ctx_token
+    t_flops = flops / group.group_flops
+    return max(t_bytes, t_flops)
+
+
+def kv_handoff_time(meta: ServingMeta, prompt_len: int, bw: float) -> float:
+    """Moving one prompt's KV cache between disaggregated pools."""
+    return prompt_len * meta.kv_bytes_per_token / bw
+
+
+def serving_page_budget(meta: ServingMeta, group: DeviceGroup,
+                        page_size: int, *, reserve: float = 0.2) -> int:
+    """How many KV pages a decode pool can hold: group HBM minus the
+    (sharded) weights minus a ``reserve`` fraction for activations."""
+    free = group.n_devices * group.hw.hbm_bytes * (1.0 - reserve) \
+        - meta.param_bytes
+    page_bytes = page_size * meta.kv_bytes_per_token
+    return max(int(free // page_bytes), 0)

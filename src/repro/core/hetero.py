@@ -155,6 +155,36 @@ def shrink_cluster(spec: ClusterSpec, removed: dict) -> ClusterSpec:
     return ClusterSpec(groups=tuple(groups))
 
 
+def partition_cluster(spec: ClusterSpec, names: Sequence[str]
+                      ) -> tuple:
+    """Split ``spec`` into (named groups, the rest) — two ClusterSpecs.
+
+    The prefill/decode router (repro.serving.router) carves a mixed
+    cluster into a prefill pool and a decode pool along *group*
+    boundaries; this is the loud-error partition primitive it uses (the
+    same idiom as :func:`shrink_cluster`): unknown names, duplicate
+    names, taking every group, or taking none are all errors — a router
+    must never silently serve from an empty pool.
+    """
+    by_name = {g.name: g for g in spec.groups}
+    picked = list(names)
+    if not picked:
+        raise ValueError("partition needs at least one group name")
+    if len(set(picked)) != len(picked):
+        raise ValueError(f"duplicate group names in partition: {picked}")
+    unknown = [n for n in picked if n not in by_name]
+    if unknown:
+        raise ValueError(f"unknown device groups {unknown}; have "
+                         f"{sorted(by_name)}")
+    if len(picked) == len(spec.groups):
+        raise ValueError(
+            "partition takes every group — the complement pool would be "
+            "empty; a disaggregated deployment needs both pools populated")
+    taken = tuple(g for g in spec.groups if g.name in set(picked))
+    rest = tuple(g for g in spec.groups if g.name not in set(picked))
+    return ClusterSpec(groups=taken), ClusterSpec(groups=rest)
+
+
 def stage_groups_for(spec: ClusterSpec, strat: StrategySpec) -> tuple:
     """Map each of the ``pp`` stages to its hosting DeviceGroup.
 

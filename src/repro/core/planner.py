@@ -419,6 +419,34 @@ class ExecutionPlan:
         bspec = self.batch_shardings(batch_tree)
         return jax.jit(prefill, in_shardings=(self.param_shardings, bspec))
 
+    def paged_state_specs(self, batch: int, n_pages: int, page_size: int,
+                          max_pages: int):
+        shapes = self.model.paged_state_shapes(batch, n_pages, page_size,
+                                               max_pages)
+        axes = self.model.paged_state_axes()
+        return jax.tree.map(
+            lambda names, sds: self.rules.spec_for(names, sds.shape),
+            axes, shapes, is_leaf=_is_axes)
+
+    def jit_serve_step_paged(self, batch: int, n_pages: int, page_size: int,
+                             max_pages: int, donate: bool = True):
+        model, rules, mesh = self.model, self.rules, self.mesh
+
+        def serve(params, tokens, state):
+            with use_rules(rules):
+                return model.serve_step_paged(params, tokens, state)
+
+        sspec = _ns(mesh, self.paged_state_specs(batch, n_pages, page_size,
+                                                 max_pages))
+        tok = NamedSharding(mesh, self.rules.spec_for(("batch",), (batch,)))
+        logits_sh = NamedSharding(
+            mesh, self.rules.spec_for(("batch", "vocab"),
+                                      (batch, self.model.cfg.padded_vocab)))
+        return jax.jit(serve,
+                       in_shardings=(self.param_shardings, tok, sspec),
+                       out_shardings=(logits_sh, sspec),
+                       donate_argnums=(2,) if donate else ())
+
     # ---- loss only (benchmarks / eval) ----
     def jit_loss(self, batch_tree):
         model, rules, mesh = self.model, self.rules, self.mesh

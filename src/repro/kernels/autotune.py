@@ -51,6 +51,7 @@ class KernelTiles:
     xent_block_t: int = 128     # fused-xent token tile
     xent_block_v: int = 512     # fused-xent vocab tile
     ssd_chunk: int = 128        # SSD intra-chunk length
+    page_size: int = 64         # paged-KV decode page rows (serving)
 
     def shrink_to(self, seq: int | None = None, vocab: int | None = None
                   ) -> "KernelTiles":
@@ -143,8 +144,17 @@ def autotune(hw: Hardware | None, *, head_dim: int = 128, group: int = 1,
     chunk = _largest_fitting(
         budget, cap, lambda t: f32 * (4 * t * D + t * t))
 
+    # paged-KV decode page: one grid step holds a (page, D) k and v tile,
+    # the (G, page) score strip and the (G, D) q/acc strips.  The page is
+    # both the kernel tile AND the allocator granularity, so it is capped
+    # at 256 — larger pages waste allocator granularity faster than they
+    # buy arithmetic intensity (decode is bandwidth-bound regardless).
+    page = _largest_fitting(
+        budget, min(cap, 256),
+        lambda t: f32 * (2 * t * D + G * t + 2 * G * D))
+
     return KernelTiles(block_q=bq, block_k=tiles_bk, xent_block_t=bt,
-                       xent_block_v=bv, ssd_chunk=chunk
+                       xent_block_v=bv, ssd_chunk=chunk, page_size=page
                        ).shrink_to(seq=seq, vocab=vocab)
 
 

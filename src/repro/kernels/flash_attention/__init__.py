@@ -1,4 +1,5 @@
 from repro.kernels.flash_attention.flash import (  # noqa: F401
     flash_attention, flash_attention_bwd)
 from repro.kernels.flash_attention.ops import flash  # noqa: F401
+from repro.kernels.flash_attention.paged import paged_decode  # noqa: F401
 from repro.kernels.flash_attention.ref import attention_ref  # noqa: F401

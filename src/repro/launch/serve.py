@@ -1,157 +1,104 @@
-"""Batched serving driver: continuous batching over prefill + decode.
+"""Serving driver CLI: continuous batching with a dense or paged KV cache.
 
-A minimal production-shaped server loop (no network layer — requests come
-from a queue/generator): requests are admitted into a fixed-size batch of
-decode *slots*; each slot holds one sequence's position + KV/SSD state
-column.  Prefill runs per admitted request (right-sized jit cache keyed by
-padded length); decode advances all active slots in lock-step with the
-planner's sharded ``serve_step``.  Finished slots (EOS or budget) are
-recycled — the standard continuous-batching pattern adapted to JAX's static
-shapes (state buffers are allocated once at ``max_len``).
+The server core lives in :mod:`repro.serving.server`; this module wires it
+to a model/plan and drives it in one of two modes:
+
+- **batch** (default): all requests available at t=0, drain the queue —
+  the original CPU sanity loop.
+- **--traffic**: open-loop replay of a deterministic heavy-tail arrival
+  trace (:mod:`repro.serving.traffic`) against the wall clock, with
+  admission control (paged mode holds arrivals when the page pool can't
+  cover their prompt) and per-request TTFT/TPOT/e2e accounting
+  (:mod:`repro.serving.metrics`).
 
 Usage (CPU sanity)::
 
     python -m repro.launch.serve --arch tinyllama-1.1b --smoke \
         --requests 8 --batch-slots 4 --gen 16
+
+    python -m repro.launch.serve --arch tinyllama-1.1b --smoke --traffic \
+        --cache paged --requests 16 --batch-slots 4 --rate 4 --gen 8
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.planner import compile_plan
 from repro.launch.train import parse_mesh
+from repro.serving.metrics import RequestTiming, ServeMetrics
+from repro.serving.server import Request, Server
+from repro.serving.traffic import TrafficCfg, make_trace
+
+# re-exported for back-compat (tests and older drivers import from here)
+__all__ = ["Request", "Server", "main", "run_trace"]
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new: int = 16
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+def run_trace(server: Server, params, trace, *, prompt_rng=None,
+              vocab: int = 1000) -> ServeMetrics:
+    """Open-loop wall-clock replay of ``trace`` against ``server``.
 
+    Arrivals become *ready* at their trace time whether or not the server
+    keeps up (queueing shows up in TTFT, as it should).  Ready requests
+    admit FIFO while slots are free **and** admission control passes —
+    a head-of-line request the page pool can't cover blocks the queue,
+    holding its arrival-time ordering.  Preempted requests re-enter at
+    the front of the ready queue.
+    """
+    rng = prompt_rng or np.random.default_rng(1234)
+    prompts = {a.rid: rng.integers(0, vocab, a.prompt_len, dtype=np.int32)
+               for a in trace}
+    arrivals = sorted(trace, key=lambda a: (a.t, a.rid))
+    timings = {a.rid: RequestTiming(rid=a.rid, arrival=a.t) for a in trace}
+    metrics = ServeMetrics()
+    ready: list = []                      # [(Request, arrival_t)]
+    t0 = time.time()
+    now = lambda: time.time() - t0
 
-class Server:
-    def __init__(self, model, plan, *, batch_slots: int, max_len: int,
-                 eos_id: int = 1):
-        self.model = model
-        self.plan = plan
-        self.mesh = plan.mesh
-        self.B = batch_slots
-        self.max_len = max_len
-        self.eos = eos_id
-        with self.mesh:
-            self.serve_step = plan.jit_serve_step(batch_slots, max_len,
-                                                  donate=False)
-            specs = plan.state_specs(batch_slots, max_len)
-            self.state_shardings = jax.tree.map(
-                lambda s: jax.NamedSharding(self.mesh, s), specs,
-                is_leaf=lambda t: isinstance(t, jax.sharding.PartitionSpec))
-            state = jax.tree.map(
-                lambda s, sh: jnp.zeros(s.shape, s.dtype, device=sh),
-                model.decode_state_shapes(batch_slots, max_len),
-                self.state_shardings)
-        self.state = state
-        self.tokens = jnp.zeros((batch_slots,), jnp.int32)
-        self.slots: list = [None] * batch_slots
-        self.steps = 0
+    def finish(req, t):
+        tm = timings[req.rid]
+        tm.finished = t
+        tm.n_tokens = len(req.out_tokens)
+        tm.preemptions = req.preemptions
+        metrics.add(tm)
 
-    # --- admission: run prefill for one request into one slot ---
-    def admit(self, params, req: Request, slot: int) -> None:
-        """Prefill ``req`` into ``slot``.  A request that finishes at
-        admission (EOS from prefill, or a one-token budget) is marked
-        ``done`` and never occupies the slot — the caller collects it."""
-        prompt = jnp.asarray(req.prompt)[None]           # (1, S)
-        with self.mesh:
-            logits, st = self.model.prefill(
-                params, {"tokens": prompt},
-                gen_budget=self.max_len - prompt.shape[1])
-        tok = int(jnp.argmax(logits[0, :self.model.cfg.vocab]))
-        req.out_tokens.append(tok)
-        if tok == self.eos or len(req.out_tokens) >= req.max_new:
-            req.done = True
-            return
-        # batch=1 prefill state → write into slot via dynamic_update_slice,
-        # then re-place on the serving shardings (admission is off the
-        # decode hot path)
-        self.state = jax.device_put(
-            _write_slot(self.state, st, slot, self.model.state_axes()),
-            self.state_shardings)
-        self.tokens = self.tokens.at[slot].set(tok)
-        self.slots[slot] = req
-
-    def step(self, params) -> list:
-        """Advance every active slot one token; returns the requests that
-        finished this step.
-
-        Finished requests must be *returned*, not just freed: the slot is
-        recycled in the same pass (``self.slots[b] = None``), so a caller
-        scanning ``server.slots`` afterwards can never observe a done
-        request — the pre-fix driver collected exactly that way and its
-        ``done`` list stayed empty forever.
-        """
-        with self.mesh:
-            logits, self.state = self.serve_step(params, self.tokens,
-                                                 self.state)
-        nxt = jnp.argmax(logits[:, :self.model.cfg.vocab], axis=-1)
-        self.tokens = nxt.astype(jnp.int32)
-        self.steps += 1
-        finished = []
-        for b, req in enumerate(self.slots):
-            if req is None or req.done:
-                continue
-            tok = int(nxt[b])
-            req.out_tokens.append(tok)
-            if tok == self.eos or len(req.out_tokens) >= req.max_new:
-                req.done = True
-                self.slots[b] = None          # recycle the slot …
-                finished.append(req)          # … but hand the request back
-        return finished
-
-    def free_slot(self) -> int | None:
-        for b, s in enumerate(self.slots):
-            if s is None:
-                return b
-        return None
-
-
-def _write_slot(state, st_one, slot: int, axes) -> dict:
-    """Write a batch-1 prefill state into slot ``slot`` of the batch state."""
-    def one(big, small, names):
-        names = tuple(names)
-        if "batch" not in names:
-            return big
-        b_ax = names.index("batch")
-        idx = [0] * big.ndim
-        idx[b_ax] = slot
-        sl = small
-        if small.shape[b_ax] != 1:
-            sl = jnp.expand_dims(small, b_ax)
-        # pad/crop the kv_seq dim to the slot buffer
-        for d, nm in enumerate(names):
-            if nm == "kv_seq" and sl.shape[d] != big.shape[d]:
-                pad = big.shape[d] - sl.shape[d]
-                if pad > 0:
-                    cfgpad = [(0, 0)] * sl.ndim
-                    cfgpad[d] = (0, pad)
-                    sl = jnp.pad(sl, cfgpad)
-                else:
-                    sl = jax.lax.slice_in_dim(sl, 0, big.shape[d], axis=d)
-        return jax.lax.dynamic_update_slice(big, sl.astype(big.dtype), idx)
-
-    is_axes = lambda t: isinstance(t, tuple) and all(
-        isinstance(e, (str, type(None))) for e in t)
-    cache = jax.tree.map(one, state["cache"], st_one["cache"], axes["cache"],
-                         is_leaf=is_axes)
-    return {"cache": cache,
-            "pos": state["pos"].at[slot].set(st_one["pos"][0])}
+    while arrivals or ready or server.active:
+        t = now()
+        while arrivals and arrivals[0].t <= t:
+            a = arrivals.pop(0)
+            ready.append((Request(a.rid, prompts[a.rid], max_new=a.gen_len),
+                          a.t))
+        # FIFO admission with head-of-line blocking on the page budget
+        while ready and (slot := server.free_slot()) is not None:
+            req, _ = ready[0]
+            if not server.can_admit(req):
+                break
+            ready.pop(0)
+            server.admit(params, req, slot)
+            t = now()
+            tm = timings[req.rid]
+            if tm.admitted is None:        # preempted re-admits keep TTFT
+                tm.admitted = tm.first_token = t
+            if req.done:
+                finish(req, t)
+        if server.active:
+            for req in server.step(params):
+                finish(req, now())
+            for req in server.take_requeued():
+                ready.insert(0, (req, timings[req.rid].arrival))
+        elif ready:
+            # empty server that still can't admit the head → it never will
+            raise SystemExit(
+                f"[serve] request {ready[0][0].rid} can never be admitted "
+                f"(prompt {len(ready[0][0].prompt)} + gen "
+                f"{ready[0][0].max_new} vs max_len/page budget)")
+        elif arrivals:
+            time.sleep(min(max(arrivals[0].t - now(), 0.0), 0.05))
+    return metrics
 
 
 def main(argv=None) -> dict:
@@ -163,6 +110,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--cache", choices=("dense", "paged"), default="dense")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="KV rows per page; 0 = the autotuned page size")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="physical pages in the pool (incl. the trash "
+                         "page); 0 = full residency for every slot")
+    ap.add_argument("--traffic", action="store_true",
+                    help="open-loop Pareto arrival replay with TTFT/TPOT "
+                         "accounting instead of the drain-the-queue loop")
+    ap.add_argument("--rate", type=float, default=4.0,
+                    help="--traffic mean arrival rate (req/s)")
     ap.add_argument("--mesh", default="")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -176,31 +134,69 @@ def main(argv=None) -> dict:
     with mesh:
         params = plan.init_params(jax.random.key(args.seed))
 
+    server = Server(model, plan, batch_slots=args.batch_slots,
+                    max_len=args.max_len, cache=args.cache,
+                    page_size=args.page_size, n_pages=args.pages)
+
+    if args.traffic:
+        tc = TrafficCfg(rate=args.rate, n_requests=args.requests,
+                        prompt_lens=(args.prompt_len,),
+                        gen_lens=(args.gen,))
+        trace = make_trace(tc, seed=args.seed)
+        t0 = time.time()
+        metrics = run_trace(server, params, trace,
+                            prompt_rng=np.random.default_rng(args.seed),
+                            vocab=cfg.vocab)
+        dt = time.time() - t0
+        s = metrics.summary()
+        if s["completed"] != args.requests:
+            raise SystemExit(
+                f"[serve] BUG: {s['completed']}/{args.requests} requests "
+                f"completed under traffic replay")
+        print(f"[serve/{args.cache}] traffic: {s['completed']} requests, "
+              f"{s['tokens']} tokens in {dt:.2f}s — "
+              f"{s['tokens_per_s']:.1f} tok/s, "
+              f"ttft p50/p99 {s['ttft_p50_s'] * 1e3:.0f}/"
+              f"{s['ttft_p99_s'] * 1e3:.0f} ms, "
+              f"tpot {s['tpot_mean_s'] * 1e3:.1f} ms, "
+              f"{s['preemptions']} preemptions, "
+              f"{server.prefill_cache_size} prefill buckets")
+        s["steps"] = server.steps
+        s["seconds"] = dt
+        return s
+
     rng = np.random.default_rng(args.seed)
     pending = [Request(i, rng.integers(0, cfg.vocab, args.prompt_len,
                                        dtype=np.int32), max_new=args.gen)
                for i in range(args.requests)]
-    server = Server(model, plan, batch_slots=args.batch_slots,
-                    max_len=args.max_len)
 
     t0 = time.time()
     done: list = []
-    while pending or any(s is not None for s in server.slots):
-        while pending and (slot := server.free_slot()) is not None:
+    while pending or server.active:
+        while (pending and (slot := server.free_slot()) is not None
+               and server.can_admit(pending[0])):
             req = pending.pop(0)
             server.admit(params, req, slot)
             if req.done:                      # finished at admission
                 done.append(req)
+        if pending and not server.active:
+            raise SystemExit(
+                f"[serve] request {pending[0].rid} can never be admitted "
+                f"(prompt {len(pending[0].prompt)} + gen "
+                f"{pending[0].max_new} vs max_len {args.max_len} / page "
+                f"budget)")
         done.extend(server.step(params))
+        pending[:0] = server.take_requeued()  # preempted restart first
     dt = time.time() - t0
     if len(done) != args.requests:
         raise SystemExit(
             f"[serve] BUG: {len(done)}/{args.requests} requests completed "
             f"— finished requests were dropped")
     total_toks = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {args.requests} requests completed, {total_toks} tokens "
-          f"in {dt:.2f}s ({total_toks / dt:.1f} tok/s, "
-          f"{server.steps} decode steps)")
+    print(f"[serve/{args.cache}] {args.requests} requests completed, "
+          f"{total_toks} tokens in {dt:.2f}s ({total_toks / dt:.1f} tok/s, "
+          f"{server.steps} decode steps, "
+          f"{server.prefill_cache_size} prefill buckets)")
     return {"steps": server.steps, "seconds": dt,
             "completed": len(done), "tokens": total_toks}
 

@@ -283,6 +283,25 @@ def cross_attention(params: dict, x: jax.Array, memory: jax.Array,
 # decode (one token vs a sharded KV cache) — explicit flash-decode combine
 # ---------------------------------------------------------------------------
 
+def _decode_qkv(params: dict, x: jax.Array, pos: jax.Array, cfg: AttnCfg):
+    """Shared decode-step projections: x (B, E) → q (B, H, D), k/v (B, K, D),
+    q/k normed and roped at ``pos``.  Used verbatim by the dense and paged
+    decode paths so the two stay numerically identical by construction."""
+    B = x.shape[0]
+    q = jnp.einsum("be,ehd->bhd", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("be,ekd->bkd", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("be,ekd->bkd", x, params["wv"].astype(x.dtype))
+    if cfg.qk_norm:
+        q = layers.rmsnorm(params["q_norm"], q)
+        k = layers.rmsnorm(params["k_norm"], k)
+    if cfg.use_rope:
+        posb = pos[:, None] if cfg.mrope_sections is None else \
+            jnp.broadcast_to(pos[:, None, None], (B, 3, 1))
+        q = layers.apply_rope(q[:, None], posb, cfg.rope_theta, cfg.mrope_sections)[:, 0]
+        k = layers.apply_rope(k[:, None], posb, cfg.rope_theta, cfg.mrope_sections)[:, 0]
+    return q, k, v
+
+
 def decode_attention(params: dict, x: jax.Array, k_cache: jax.Array,
                      v_cache: jax.Array, pos: jax.Array, cfg: AttnCfg,
                      k_sc: jax.Array | None = None,
@@ -303,17 +322,7 @@ def decode_attention(params: dict, x: jax.Array, k_cache: jax.Array,
     Smax = k_cache.shape[1]
     quant = k_sc is not None
 
-    q = jnp.einsum("be,ehd->bhd", x, params["wq"].astype(x.dtype))
-    k = jnp.einsum("be,ekd->bkd", x, params["wk"].astype(x.dtype))
-    v = jnp.einsum("be,ekd->bkd", x, params["wv"].astype(x.dtype))
-    if cfg.qk_norm:
-        q = layers.rmsnorm(params["q_norm"], q)
-        k = layers.rmsnorm(params["k_norm"], k)
-    if cfg.use_rope:
-        posb = pos[:, None] if cfg.mrope_sections is None else \
-            jnp.broadcast_to(pos[:, None, None], (B, 3, 1))
-        q = layers.apply_rope(q[:, None], posb, cfg.rope_theta, cfg.mrope_sections)[:, 0]
-        k = layers.apply_rope(k[:, None], posb, cfg.rope_theta, cfg.mrope_sections)[:, 0]
+    q, k, v = _decode_qkv(params, x, pos, cfg)
 
     kv_names = ("batch", "kv_seq", "kv_heads", None)
     sc_names = ("batch", "kv_seq", "kv_heads")
@@ -364,3 +373,81 @@ def decode_attention(params: dict, x: jax.Array, k_cache: jax.Array,
     if quant:
         return y, k_cache, v_cache, k_sc, v_sc
     return y, k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# paged decode (block/paged KV cache — DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def paged_scatter(pool: jax.Array, block_table: jax.Array, pos: jax.Array,
+                  new: jax.Array) -> jax.Array:
+    """Write ``new`` (B, K, D) into the page pool cell each slot's ``pos``
+    maps to through its block table.
+
+    pool: (P, page_size, K, D); block_table: (B, max_pages) int32 (0 = the
+    reserved trash page); pos: (B,).  One-hot outer-product ADD, like the
+    dense cache's scatter, so the write is jit-shaped for every slot — but
+    writes that resolve to the trash page (inactive slots, unallocated
+    entries) are *dropped*, keeping page 0 all-zero forever.  The target
+    cell is zero by the allocator invariant (pages are zeroed when
+    allocated, each cell written once), so ``0 + new`` stores ``new``
+    bit-exactly.
+    """
+    P, ps = pool.shape[0], pool.shape[1]
+    page_idx = pos // ps
+    phys = jnp.take_along_axis(block_table, page_idx[:, None], axis=1)[:, 0]
+    live = (phys != 0).astype(jnp.float32)
+    oh_page = jax.nn.one_hot(phys, P, dtype=jnp.float32) * live[:, None]
+    oh_row = jax.nn.one_hot(pos % ps, ps, dtype=jnp.float32)
+    delta = jnp.einsum("bp,br,bkd->prkd", oh_page.astype(pool.dtype),
+                       oh_row.astype(pool.dtype), new.astype(pool.dtype))
+    return pool + delta
+
+
+def paged_decode_attention(params: dict, x: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_table: jax.Array,
+                           pos: jax.Array, cfg: AttnCfg, *,
+                           impl: str = "ref", page_interpret: bool | None = None):
+    """Decode step against a paged KV cache.
+
+    x: (B, E); k_pool/v_pool: (P, page_size, K, D) physical page pools
+    shared by all slots; block_table: (B, max_pages) int32 slot→page map
+    (entry 0 = the trash page); pos: (B,).  Returns (y, k_pool', v_pool').
+
+    ``impl="ref"`` is *bit-exact* against :func:`decode_attention` on the
+    equivalent dense cache by construction: the pool is gathered through
+    the block table into a dense-cache-shaped array (identical values —
+    unallocated entries gather the all-zero trash page, exactly what the
+    dense cache holds beyond ``pos``) and the SAME ``decode_attention``
+    runs on it; the new KV is then extracted from the updated gather and
+    persisted into the pool.  ``impl="pallas"`` writes the pool first and
+    runs the block-table-indexed flash-decode kernel
+    (:func:`repro.kernels.flash_attention.paged_decode`) over it.
+    """
+    B, E = x.shape
+    K, G, D = cfg.n_kv_heads, cfg.group, cfg.head_dim
+    P, ps = k_pool.shape[0], k_pool.shape[1]
+    max_pages = block_table.shape[1]
+
+    if impl == "ref":
+        kd = k_pool[block_table].reshape(B, max_pages * ps, K, D)
+        vd = v_pool[block_table].reshape(B, max_pages * ps, K, D)
+        y, k_upd, v_upd = decode_attention(params, x, kd, vd, pos, cfg)
+        # the pos cell was zero pre-add, so the one-hot row-pick recovers
+        # the freshly written post-rope k/v exactly (1·k + Σ 0·finite = k)
+        oh = jax.nn.one_hot(pos, max_pages * ps, dtype=k_upd.dtype)
+        k_new = jnp.einsum("bs,bskd->bkd", oh, k_upd)
+        v_new = jnp.einsum("bs,bskd->bkd", oh, v_upd)
+    else:
+        q, k_new, v_new = _decode_qkv(params, x, pos, cfg)
+    k_pool = paged_scatter(k_pool, block_table, pos, k_new)
+    v_pool = paged_scatter(v_pool, block_table, pos, v_new)
+    if impl != "ref":
+        from repro.kernels.flash_attention import paged_decode
+        if page_interpret is None:
+            page_interpret = jax.default_backend() != "tpu"
+        out = paged_decode(q, k_pool, v_pool, block_table, pos,
+                           interpret=page_interpret)
+        out = out.astype(x.dtype)
+        y = jnp.einsum("bhd,hde->be", out, params["wo"].astype(x.dtype))
+    return y, k_pool, v_pool

@@ -404,10 +404,22 @@ class Model:
                       "moe_lb": jnp.zeros(()), "moe_z": jnp.zeros(())}
 
     # ---- serving ----
-    def prefill(self, params, batch, gen_budget: int = 64):
-        """→ (last-token logits (B, Vp), decode state)."""
+    def prefill(self, params, batch, gen_budget: int = 64, last_idx=None):
+        """→ (last-token logits (B, Vp), decode state).
+
+        ``last_idx`` (B,) int32: index of each prompt's last *real* token
+        when prompts are right-padded to a shared (bucketed) length —
+        logits are read at ``last_idx`` instead of the final position,
+        ``pos`` starts at ``last_idx + 1``, and the KV cache is zeroed
+        beyond ``last_idx`` so the pad tokens' KV can never be attended
+        to (decode's one-hot ADD write at ``pos`` lands on a zero cell).
+        ``last_idx=None`` keeps the original unbucketed behaviour.
+        """
         cfg = self.cfg
         if cfg.family == "encdec":
+            if last_idx is not None:
+                raise ValueError("last_idx is not supported for encdec "
+                                 "prefill (frame inputs are not padded)")
             return self._prefill_encdec(params, batch, gen_budget)
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -415,14 +427,26 @@ class Model:
         x, caches = tfm.prefill_stack(params["blocks"], x,
                                       self._positions(B, S), self.stack)
         x = layers.make_norm(cfg.norm)[2](params["final_norm"], x)
-        logits = x[:, -1] @ self._head_w(params).astype(cfg.adtype)
+        if last_idx is None:
+            h_last = x[:, -1]
+            pos = jnp.full((B,), S, jnp.int32)
+        else:
+            h_last = jnp.take_along_axis(
+                x, last_idx[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+            pos = last_idx.astype(jnp.int32) + 1
+        logits = h_last @ self._head_w(params).astype(cfg.adtype)
 
-        def pad_cache(path_leaf):
-            return path_leaf
+        keep = None
+        if last_idx is not None:
+            keep = (jnp.arange(S + gen_budget)[None, :]
+                    <= last_idx[:, None])                      # (B, S+gb)
 
         def pad_kv(a):
             # (L, B, S, K, D) → (L, B, S + budget, K, D)
-            return jnp.pad(a, ((0, 0), (0, 0), (0, gen_budget), (0, 0), (0, 0)))
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, gen_budget), (0, 0), (0, 0)))
+            if keep is not None:
+                a = jnp.where(keep[None, :, :, None, None], a, 0)
+            return a
 
         state = {}
         for key, val in caches.items():
@@ -434,7 +458,7 @@ class Model:
                 full[key] = state[key]
         # TODO(ssm prefill): chunked-scan final states; for ssm/hybrid archs
         # prefill re-runs through decode in serve.py when exact states needed.
-        return logits, {"cache": full, "pos": jnp.full((B,), S, jnp.int32)}
+        return logits, {"cache": full, "pos": pos}
 
     def _prefill_encdec(self, params, batch, gen_budget: int):
         cfg = self.cfg
@@ -498,6 +522,47 @@ class Model:
         else:
             ax = tfm.axes_stack_state(self.stack)
         return {"cache": ax, "pos": ("batch",)}
+
+    # ---- paged serving (block-table KV cache, DESIGN.md §9) ----
+    @property
+    def supports_paged(self) -> bool:
+        return (self.cfg.family != "encdec" and self.stack is not None
+                and all(b.mixer == "attn" for b in self.stack.pattern)
+                and self.stack.kv_cache_dtype != "int8")
+
+    def serve_step_paged(self, params, tokens: jax.Array, state: dict):
+        """tokens: (B,) → (logits (B, Vp), state').  ``state`` holds the
+        shared page pools plus per-slot ``block_table`` (B, max_pages) and
+        ``pos`` (B,); pools are updated in place of the dense cache."""
+        cfg = self.cfg
+        if not self.supports_paged:
+            raise ValueError(f"paged decode unsupported for {cfg.family}")
+        pos = state["pos"]
+        x = layers.embed(params["embed"], tokens).astype(cfg.adtype)
+        x = constrain(x, ("batch", None))
+        x, pools = tfm.decode_stack_paged(params["blocks"], x, state["pools"],
+                                          state["block_table"], pos,
+                                          self.stack)
+        x = layers.make_norm(cfg.norm)[2](params["final_norm"], x[:, None])[:, 0]
+        logits = x @ self._head_w(params).astype(cfg.adtype)
+        logits = constrain(logits, ("batch", "vocab"))
+        return logits, {"pools": pools, "block_table": state["block_table"],
+                        "pos": pos + 1}
+
+    def paged_state_shapes(self, batch: int, n_pages: int, page_size: int,
+                           max_pages: int):
+        cfg = self.cfg
+        pools = jax.eval_shape(
+            lambda: tfm.init_paged_stack_state(self.stack, n_pages, page_size,
+                                               cfg.adtype))
+        return {"pools": pools,
+                "block_table": jax.ShapeDtypeStruct((batch, max_pages),
+                                                    jnp.int32),
+                "pos": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+
+    def paged_state_axes(self) -> dict:
+        return {"pools": tfm.axes_paged_stack_state(self.stack),
+                "block_table": ("batch", None), "pos": ("batch",)}
 
 
 def build(cfg: LMCfg) -> Model:

@@ -315,3 +315,97 @@ def decode_stack(params: dict, x: jax.Array, state: dict, pos: jax.Array,
             outs.append(s)
         new_state = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# paged decode (block/paged KV cache — serving tier, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def _check_paged(stack: StackCfg):
+    if any(b.mixer != "attn" for b in stack.pattern):
+        raise ValueError(
+            "paged KV decode requires an all-attention pattern (SSD state "
+            "is O(1) per slot and gains nothing from paging); pattern has "
+            f"mixers {[b.mixer for b in stack.pattern]}")
+    if stack.kv_cache_dtype == "int8":
+        raise ValueError(
+            "paged KV decode does not support the int8 KV cache yet — "
+            "page pools are kept in the activation dtype")
+
+
+def init_paged_stack_state(stack: StackCfg, n_pages: int, page_size: int,
+                           dtype) -> dict:
+    """Per-pattern-position page pools ``(n_rep, n_pages, page_size, K, D)``.
+
+    Pools are *slot-free*: every decode slot shares them through its block
+    table row, which is what lets short sequences stop reserving
+    ``max_len`` KV rows each.
+    """
+    _check_paged(stack)
+    pools = {}
+    for i, bcfg in enumerate(stack.pattern):
+        a = bcfg.attn
+        shape = (n_pages, page_size, a.n_kv_heads, a.head_dim)
+        s = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        pools[f"p{i}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (stack.n_rep,) + t.shape), s)
+    return pools
+
+
+def axes_paged_stack_state(stack: StackCfg) -> dict:
+    """Pools shard like the dense cache minus the batch dim: pages and
+    rows replicated, kv heads on the model axis."""
+    _check_paged(stack)
+    n = ("layers", None, None, "kv_heads", None)
+    return {f"p{i}": {"k": n, "v": n} for i in range(len(stack.pattern))}
+
+
+def paged_decode_block(params: dict, x: jax.Array, pools: dict,
+                       block_table: jax.Array, pos: jax.Array,
+                       cfg: BlockCfg, stack: StackCfg):
+    """Paged twin of :func:`decode_block` for one attention block."""
+    _, _, norm = layers.make_norm(cfg.norm)
+    h = norm(params["norm1"], x[:, None, :])[:, 0]
+    out, k_pool, v_pool = attn_mod.paged_decode_attention(
+        params["attn"], h, pools["k"], pools["v"], block_table, pos,
+        cfg.attn, impl=stack.attn_impl)
+    pools = {"k": k_pool, "v": v_pool}
+    x = x + out
+    if cfg.mlp != "none":
+        h = norm(params["norm2"], x[:, None, :])
+        if cfg.mlp == "moe":
+            out, _ = moe_mod.moe_block(params["moe"], h, cfg.moe)
+        else:
+            out = layers.mlp(params["mlp"], h, act=cfg.act)
+        x = x + out[:, 0]
+    return x, pools
+
+
+def decode_stack_paged(params: dict, x: jax.Array, pools: dict,
+                       block_table: jax.Array, pos: jax.Array,
+                       stack: StackCfg):
+    """x: (B, E) → (x', pools').  :func:`decode_stack` against page pools;
+    the block table and positions are shared by every layer."""
+    _check_paged(stack)
+
+    def rep_body(x, inp):
+        rep_params, rep_pools = inp
+        new_pools = {}
+        for i, bcfg in enumerate(stack.pattern):
+            x, p = paged_decode_block(rep_params[f"p{i}"], x,
+                                      rep_pools[f"p{i}"], block_table, pos,
+                                      bcfg, stack)
+            new_pools[f"p{i}"] = p
+        return x, new_pools
+
+    if stack.scan and stack.n_rep > 1:
+        x, new_pools = jax.lax.scan(rep_body, x, (params, pools))
+    else:
+        outs = []
+        for r in range(stack.n_rep):
+            rp = jax.tree.map(lambda p: p[r], params)
+            rs = jax.tree.map(lambda s: s[r], pools)
+            x, s = rep_body(x, (rp, rs))
+            outs.append(s)
+        new_pools = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return x, new_pools

@@ -1,0 +1,21 @@
+"""Production serving tier (DESIGN.md §9).
+
+- :mod:`repro.serving.paged_cache` — block/paged KV cache: fixed-size
+  pages, slot→page block tables, host-side free-list allocation.
+- :mod:`repro.serving.router` — prefill/decode disaggregation over a
+  mixed :class:`~repro.core.cost_model.ClusterSpec`.
+- :mod:`repro.serving.traffic` — open-loop heavy-tail (Pareto) arrivals.
+- :mod:`repro.serving.metrics` — per-request TTFT/TPOT/e2e accounting.
+- :mod:`repro.serving.sim` — the analytic discrete-event serving
+  simulator behind ``benchmarks/fig_serve.py``.
+"""
+from repro.serving.metrics import RequestTiming, ServeMetrics, percentile
+from repro.serving.paged_cache import PageAllocator, PagedCacheConfig
+from repro.serving.router import DisaggPlan, route
+from repro.serving.traffic import Arrival, TrafficCfg, make_trace
+
+__all__ = [
+    "Arrival", "DisaggPlan", "PageAllocator", "PagedCacheConfig",
+    "RequestTiming", "ServeMetrics", "TrafficCfg", "make_trace",
+    "percentile", "route",
+]

@@ -38,7 +38,31 @@ def test_serve_driver(tmp_path):
     # regression: finished requests used to be freed from their slot in the
     # same pass that marked them done, so the driver's `done` list stayed
     # empty; the driver now exits non-zero unless every request completes
-    assert "[serve] 4 requests completed" in out
+    assert "[serve/dense] 4 requests completed" in out
+
+
+@pytest.mark.slow
+def test_serve_driver_paged_preemption(tmp_path):
+    """Paged CLI with a pool too small for all slots: preemption +
+    requeue must still complete every request."""
+    out = run_cli(["repro.launch.serve", "--arch", "tinyllama-1.1b",
+                   "--smoke", "--requests", "6", "--batch-slots", "3",
+                   "--gen", "24", "--prompt-len", "16", "--max-len", "64",
+                   "--cache", "paged", "--page-size", "16", "--pages", "7"])
+    assert "[serve/paged] 6 requests completed" in out
+
+
+@pytest.mark.slow
+def test_serve_driver_traffic_replay(tmp_path):
+    """Open-loop traffic mode: every arrival completes with TTFT/TPOT
+    accounting on the paged cache."""
+    out = run_cli(["repro.launch.serve", "--arch", "tinyllama-1.1b",
+                   "--smoke", "--traffic", "--cache", "paged",
+                   "--requests", "10", "--batch-slots", "4", "--rate", "8",
+                   "--gen", "8", "--prompt-len", "16", "--max-len", "64",
+                   "--page-size", "16"])
+    assert "traffic: 10 requests" in out
+    assert "ttft p50/p99" in out
 
 
 @pytest.mark.slow
