@@ -1,13 +1,14 @@
 """CI benchmark-regression gate: run the analytic benchmarks, record the
 headline numbers, fail on regression below the recorded floors.
 
-    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR7.json]
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR8.json]
 
 The analytic (cost-model / simulated-clock) benchmarks are deterministic —
 pure arithmetic over hardware tables, no execution, no timing noise — so
 they can be gated hard in CI.  This script runs fig2 (schedule grid), fig7
 (heterogeneous balancing), fig9 (nested DP×EP MoE), fig_elastic
-(self-healing straggler eviction), and the kernel roofline pass
+(self-healing straggler eviction), fig_calibration (profile-calibrated
+cost model + drift-triggered rebalance), and the kernel roofline pass
 (benchmarks.kernel_bench — fused Pallas kernels vs jnp refs per Hardware
 entry, with interpret-mode numerics), writes every headline metric to a
 JSON artifact, and exits non-zero if any gated metric falls below its
@@ -31,16 +32,22 @@ floor:
     serve_tokens_per_s_ratio >= 1.3   (paged+disagg vs dense colocated
                                        tokens/s on the 8×V100+8×T4
                                        flagship, benchmarks.fig_serve)
+    calibration_continuous_vs_oneshot >= 1.3  (drift-triggered rebalance
+                                       vs one-shot on the slow-drift
+                                       scenario, benchmarks.fig_calibration)
 
 Floors are deliberately below the current values (2.77 / 2.66 / 1.98 /
-2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51) so legitimate refinements
-have headroom, while a change that destroys a headline win (the balancer,
-the schedule memory model, the ep pricing, the eviction loop, the kernel
-tiling/autotuner, the serving router/simulator) fails the ``bench`` CI
-job loudly.  The kernel section additionally gates numerics
-(interpret-mode max |err| vs oracle) and the static VMEM budget as
-structural invariants; the serving section additionally gates p99 TTFT
-(disagg ≤ colocated) and parity on the prefill-heavy scenario.
+2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51 / 1.36) so legitimate
+refinements have headroom, while a change that destroys a headline win
+(the balancer, the schedule memory model, the ep pricing, the eviction
+loop, the kernel tiling/autotuner, the serving router/simulator, the
+calibration fit) fails the ``bench`` CI job loudly.  The kernel section
+additionally gates numerics (interpret-mode max |err| vs oracle) and the
+static VMEM budget as structural invariants; the serving section
+additionally gates p99 TTFT (disagg ≤ colocated) and parity on the
+prefill-heavy scenario; the calibration section additionally gates the
+final fit error and the predicted-vs-measured step-cost error (both
+≤ 10% as ceilings).
 """
 from __future__ import annotations
 
@@ -59,6 +66,7 @@ FLOORS = {
     "kernel_ssd_speedup_min": 5.0,
     "kernel_xent_footprint_min": 5.0,
     "serve_tokens_per_s_ratio": 1.3,
+    "calibration_continuous_vs_oneshot": 1.3,
 }
 
 
@@ -115,6 +123,18 @@ def collect() -> dict:
     out["serve_tokens_per_s_ratio_all"] = fs["serve_tokens_per_s_ratio_all"]
     out["serve_per_scenario"] = fs["per_scenario"]
 
+    # ---- fig_calibration: profile-calibrated cost model (analytic);
+    # strict=False for the same record-then-gate reason as fig_elastic ----
+    import benchmarks.fig_calibration as fig_cal
+    fcal = fig_cal.main(csv=False, strict=False)
+    out["calibration_continuous_vs_oneshot"] = fcal["continuous_vs_oneshot"]
+    out["calibration_error_final"] = fcal["calibration_error_final"]
+    out["calibration_error_initial"] = fcal["calibration_error_initial"]
+    out["calibration_stepcost_error_final"] = fcal["stepcost_error_final"]
+    out["calibration_drift_fit_error"] = fcal["drift_fit_error"]
+    out["calibration_rebalances"] = fcal["continuous_rebalances"]
+    out["calibration_curve"] = fcal["curve"]
+
     # ---- kernel speed pass: roofline speedups + interpret numerics ----
     import benchmarks.kernel_bench as kb
     rl = kb.roofline()
@@ -168,12 +188,28 @@ def gate(metrics: dict) -> list:
         failures.append("a serving scenario collapsed below parity with "
                         "the colocated baseline "
                         "(serve_tokens_per_s_ratio_all < 0.95)")
+    # calibration must close the sim-to-measured loop: the fitted table's
+    # residual errors are ceilings, not floors
+    if metrics.get("calibration_error_final", 1.0) > 0.10:
+        failures.append("calibration no longer recovers the ground-truth "
+                        "hardware table (calibration_error_final > 10%)")
+    if metrics.get("calibration_stepcost_error_final", 1.0) > 0.10:
+        failures.append("predicted-vs-measured step cost on the fitted "
+                        "table exceeds 10% "
+                        "(calibration_stepcost_error_final)")
+    if metrics.get("calibration_drift_fit_error", 1.0) > 0.10:
+        failures.append("the drift scenario's fitted rates diverge >10% "
+                        "from the drifted truth "
+                        "(calibration_drift_fit_error)")
+    if metrics.get("calibration_rebalances", 0) < 1:
+        failures.append("the continuous arm never recalibrated on the "
+                        "drift scenario (calibration_rebalances < 1)")
     return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR7.json")
+    ap.add_argument("--out", default="BENCH_PR8.json")
     args = ap.parse_args(argv)
     metrics = collect()
     with open(args.out, "w") as f:

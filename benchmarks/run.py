@@ -11,11 +11,13 @@ Sections:
   fig9      M6 recipe: nested replica{split[experts]} vs flat DP (paper §4)
   elastic   self-healing straggler eviction vs naive        (paper §5)
   serve     paged + disaggregated serving vs dense colocated (DESIGN.md §9)
+  calibration  profile-calibrated cost model + drift-triggered
+            rebalance vs one-shot                        (DESIGN.md §10)
   kernels   Pallas kernel numerics vs oracle + VMEM budget
   roofline  per-(arch × shape × mesh) table from the dry-run JSONL
 
 The CI regression gate over the analytic sections is benchmarks/bench_ci.py
-(writes BENCH_PR5.json, fails below the recorded floors).
+(writes BENCH_PR8.json, fails below the recorded floors).
 """
 from __future__ import annotations
 
@@ -71,6 +73,11 @@ def main() -> None:
     print("== serve: paged + disaggregated vs dense colocated (§9) ==")
     import benchmarks.fig_serve as fig_serve
     fig_serve.main()
+
+    print("=" * 72)
+    print("== calibration: fitted cost model + drift rebalance (§10) ==")
+    import benchmarks.fig_calibration as fig_cal
+    fig_cal.main()
 
     print("=" * 72)
     print("== kernels: Pallas vs oracle ==")

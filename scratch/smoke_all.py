@@ -69,6 +69,10 @@ fig_elastic.main()
 # paged-vs-dense lockstep decode step proving bit-exactness end to end
 import benchmarks.fig_serve as fig_serve
 fig_serve.main()
+# calibration smoke: the fig_calibration fit + drift comparison with its
+# built-in gates (fit error ≤10%, continuous rebalance ≥1.3× one-shot)
+import benchmarks.fig_calibration as fig_cal
+fig_cal.main()
 
 import numpy as np
 from repro.core.planner import compile_plan

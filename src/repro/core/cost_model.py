@@ -510,6 +510,116 @@ def step_cost(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
                          mem_bytes=mem, feasible=feasible, detail=detail)
 
 
+# ---------------------------------------------------------------------------
+# linear decomposition for profile-guided calibration (repro.core.calibrate)
+# ---------------------------------------------------------------------------
+#
+# step_cost is *linear in the reciprocals* of the hardware parameters: every
+# term is (a byte/FLOP volume that depends only on meta+strat) divided by
+# one hardware rate.  step_cost_features extracts those volumes, so that
+#
+#     step_cost(meta, strat, hw).total
+#         ≈ Σ_p  step_cost_features(...)[p] · hardware_reciprocals(hw)[p]
+#
+# (equality up to float re-association; tests/test_calibration.py guards the
+# identity at 1e-9 relative).  calibrate.fit inverts this: given measured
+# (features, wall-time) observations it least-squares-solves for the
+# reciprocals — i.e. for the Hardware table itself.
+
+CALIBRATION_PARAMS = ("eff_flops", "hbm_bw", "link_fast", "link_slow")
+
+
+def hardware_reciprocals(hw: Hardware) -> dict:
+    """The coordinates calibration solves for: ``param → 1/rate``.
+
+    ``eff_flops`` is the *effective* matmul rate (peak × mxu_eff) — the
+    only combination a wall-clock measurement can see; ``calibrate.fit``
+    maps it back to ``peak_flops`` holding ``mxu_eff`` at its prior.
+    """
+    return {
+        "eff_flops": 1.0 / (hw.peak_flops * hw.mxu_eff),
+        "hbm_bw": 1.0 / hw.hbm_bw,
+        "link_fast": 1.0 / hw.link_bw["fast"],
+        "link_slow": 1.0 / hw.link_bw["slow"],
+    }
+
+
+def predict_step_time(features: Mapping[str, float], hw: Hardware) -> float:
+    """Price a feature vector on ``hw``: features · reciprocals."""
+    recips = hardware_reciprocals(hw)
+    return sum(c * recips[p] for p, c in features.items() if c)
+
+
+def step_cost_features(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
+                       *, overlap: float = 0.0) -> dict:
+    """Per-hardware-parameter coefficients of one training step.
+
+    Mirrors :func:`step_cost` term by term, accumulating *effective byte
+    volumes* (ring-formula factors and overlap applied, bandwidth divided
+    out) per link kind and the per-device FLOP volume (bubble factor
+    applied) instead of times.  ``hw`` only contributes its ``axis_kind``
+    mapping — which mesh axis rides the fast vs the slow link — never a
+    rate, so the same features can be priced on any candidate table.
+
+    ``hbm_bw`` stays 0 here: the training-step model has no explicit HBM
+    term.  It is fed by per-kernel observations
+    (:meth:`repro.runtime.profiler.Profiler.record_kernel`, with byte
+    volumes from ``launch/hlo_analysis.py::hbm_traffic_bytes``) and by the
+    serving rooflines, which are HBM-bound.
+    """
+    dp, tp, pp, ep = strat.dp, strat.tp, strat.pp, strat.ep
+    feats = dict.fromkeys(CALIBRATION_PARAMS, 0.0)
+
+    def kind(axis: str) -> str:
+        return "link_" + hw.axis_kind.get(axis, "fast")
+
+    # ---- compute (+ pipeline bubble, which scales the compute term) ----
+    train_flops = meta.fwd_flops * (4.0 if strat.remat else 3.0)
+    bubble = 0.0
+    if pp > 1:
+        from repro.core.schedule import bubble_fraction_closed_form
+        bubble = bubble_fraction_closed_form(pp, max(strat.micro_batches, 1))
+    feats["eff_flops"] = train_flops / strat.devices * (1.0 + bubble)
+
+    # ---- communication (same accounting as step_cost, bw = 1) ----
+    exp_bytes = meta.expert_param_bytes if ep > 1 else 0.0
+    grad_bytes = (meta.param_bytes - exp_bytes) * meta.grad_factor / (tp * pp)
+    if dp > 1:
+        b = all_reduce_time(grad_bytes, dp, 1.0)
+        if ep > 1 and exp_bytes:
+            b += all_reduce_time(exp_bytes * meta.grad_factor / (ep * pp),
+                                 dp, 1.0)
+        feats[kind("data")] += b * (1.0 - overlap)
+    if ep > 1 and tp == 1:
+        feats[kind("model")] += (all_reduce_time(grad_bytes, ep, 1.0)
+                                 * (1.0 - overlap))
+    if ep > 1 and meta.n_moe_layers and meta.moe_dispatch_bytes:
+        n_a2a = 4 * max(meta.n_moe_layers // pp, 1)
+        feats[kind("model")] += n_a2a * all_to_all_time(
+            meta.moe_dispatch_bytes / dp, ep, 1.0)
+    if strat.zero >= 3 and dp > 1:
+        ag_bytes = ((meta.param_bytes - exp_bytes) / tp
+                    + (exp_bytes / ep if ep > 1 else 0.0)) / pp
+        feats[kind("data")] += 2 * all_gather_time(ag_bytes, dp, 1.0)
+    if tp > 1:
+        act = meta.act_bytes_per_layer / dp
+        n_ar = 4 * (meta.n_layers // pp)
+        feats[kind("model")] += n_ar * all_reduce_time(act, tp, 1.0)
+        if strat.vocab_split and meta.logits_bytes:
+            row_bytes = meta.logits_bytes / max(
+                1, (meta.logits_bytes // (4 * meta.batch)) or 1)
+            feats[kind("model")] += 3 * all_reduce_time(row_bytes / dp, tp,
+                                                        1.0)
+        elif meta.logits_bytes:
+            feats[kind("model")] += all_gather_time(meta.logits_bytes / dp,
+                                                    tp, 1.0)
+    if pp > 1:
+        act_mb = meta.act_bytes_per_layer / dp / max(strat.micro_batches, 1)
+        feats[kind("stage")] += (2 * (pp - 1) * strat.micro_batches
+                                 * p2p_time(act_mb, 1.0))
+    return feats
+
+
 def throughput(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
                **kw) -> float:
     """Samples/sec for the workload's global batch under the strategy."""

@@ -392,6 +392,47 @@ def _combine(units: Sequence[UnitPlan], extra_comm: float,
         feasible=feasible, detail=detail)
 
 
+def price_batch_shares(meta: WorkloadMeta, strat: StrategySpec,
+                       spec: ClusterSpec, shares, *,
+                       overlap: float = 0.0) -> tuple:
+    """Price an explicit per-group batch assignment (``pp == 1``).
+
+    Returns ``(units, extra)``: one :class:`UnitPlan` per group with its
+    share of the batch priced on its own hardware table, plus the
+    cross-group gradient all-reduce on the cluster's bottleneck data link.
+    This is the pricing kernel of :func:`plan_placement`, exposed so the
+    calibration loop (profiler / fig_calibration / the drift controller)
+    can re-price *stale* shares on a re-fitted ``ClusterSpec`` without
+    re-running the balancer.
+    """
+    per_replica = strat.model_parallel
+    dp_g = [g.n_devices // per_replica for g in spec.groups]
+    us = []
+    for g, d, b in zip(spec.groups, dp_g, shares):
+        s_g = dataclasses.replace(strat, dp=max(d, 1))
+        m_g = scale_meta_batch(meta, b)
+        us.append(UnitPlan(
+            kind="group", group=g, strategy=s_g, meta=m_g, batch=b,
+            layers=meta.n_layers,
+            cost=step_cost(m_g, s_g, g.hw, overlap=overlap)))
+    ex = 0.0
+    if len(spec.groups) > 1:
+        # hierarchical DP reduction: in-group ring (already in each
+        # unit's cost) + one cross-group ring on the bottleneck link
+        # (nested ep: expert grads are ep-sharded → 1/ep the
+        # volume; dense grads stay tp-sharded as in the flat path)
+        if strat.ep > 1 and meta.expert_param_bytes:
+            grad = ((meta.param_bytes - meta.expert_param_bytes)
+                    / strat.tp
+                    + meta.expert_param_bytes / strat.ep
+                    ) * meta.grad_factor
+        else:
+            grad = meta.param_bytes * meta.grad_factor / strat.tp
+        ex = all_reduce_time(grad, len(spec.groups),
+                             spec.min_bw("data")) * (1.0 - overlap)
+    return us, ex
+
+
 def plan_placement(meta: WorkloadMeta, strat: StrategySpec,
                    spec: ClusterSpec, *, overlap: float = 0.0,
                    balanced: bool = True) -> HeteroPlacement:
@@ -414,30 +455,8 @@ def plan_placement(meta: WorkloadMeta, strat: StrategySpec,
         dp_g = [g.n_devices // per_replica for g in spec.groups]
 
         def price(shares):
-            us = []
-            for g, d, b in zip(spec.groups, dp_g, shares):
-                s_g = dataclasses.replace(strat, dp=max(d, 1))
-                m_g = scale_meta_batch(meta, b)
-                us.append(UnitPlan(
-                    kind="group", group=g, strategy=s_g, meta=m_g, batch=b,
-                    layers=meta.n_layers,
-                    cost=step_cost(m_g, s_g, g.hw, overlap=overlap)))
-            ex = 0.0
-            if len(spec.groups) > 1:
-                # hierarchical DP reduction: in-group ring (already in each
-                # unit's cost) + one cross-group ring on the bottleneck link
-                # (nested ep: expert grads are ep-sharded → 1/ep the
-                # volume; dense grads stay tp-sharded as in the flat path)
-                if strat.ep > 1 and meta.expert_param_bytes:
-                    grad = ((meta.param_bytes - meta.expert_param_bytes)
-                            / strat.tp
-                            + meta.expert_param_bytes / strat.ep
-                            ) * meta.grad_factor
-                else:
-                    grad = meta.param_bytes * meta.grad_factor / strat.tp
-                ex = all_reduce_time(grad, len(spec.groups),
-                                     spec.min_bw("data")) * (1.0 - overlap)
-            return us, ex
+            return price_batch_shares(meta, strat, spec, shares,
+                                      overlap=overlap)
 
         even = tuple(proportional_split(meta.batch, dp_g))
         shares = even

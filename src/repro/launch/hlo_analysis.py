@@ -42,7 +42,19 @@ _GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
 
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1}
+                "pred": 1, "s4": 1, "u4": 1,
+                # complex
+                "c64": 8, "c128": 16,
+                # fp8 family (XLA spells several variants)
+                "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1,
+                "f8e4m3b11fnz": 1, "f8e4m3b11fnuz": 1,
+                "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+                # sub-byte packed types: count 1 byte/elem, the conservative
+                # upper bound (XLA pads sub-byte buffers in most layouts)
+                "f4e2m1fn": 1, "s2": 1, "u2": 1}
+
+# Types that occupy no HBM: tokens order effects, opaque is a handle.
+_ZERO_SIZED = {"token", "opaque"}
 
 COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
                     "all-to-all", "collective-permute")
@@ -66,6 +78,24 @@ def parse_computations(hlo: str) -> dict:
     return comps
 
 
+def dtype_bytes(dt: str) -> int:
+    """Bytes per element of an HLO dtype token.
+
+    Raises on anything unrecognised instead of silently assuming 4 bytes —
+    a bf16 or f8 buffer mis-sized that way would skew every bandwidth the
+    calibrator fits from these byte counts by 2–8×.
+    """
+    if dt in _ZERO_SIZED:
+        return 0
+    try:
+        return _DTYPE_BYTES[dt]
+    except KeyError:
+        raise ValueError(
+            f"unknown HLO dtype {dt!r}: add it to hlo_analysis._DTYPE_BYTES "
+            f"(guessing a width would silently skew calibrated bandwidths)"
+        ) from None
+
+
 def _shape_bytes(shape_str: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(shape_str):
@@ -73,7 +103,7 @@ def _shape_bytes(shape_str: str) -> int:
         for d in dims.split(","):
             if d:
                 n *= int(d)
-        total += n * _DTYPE_BYTES.get(dt, 4)
+        total += n * dtype_bytes(dt)
     return total
 
 

@@ -41,14 +41,17 @@ import jax.numpy as jnp
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.auto import auto_parallel
-from repro.core.cost_model import StrategySpec, TPU_V5E, lm_workload_meta
+from repro.core.cost_model import (StrategySpec, TPU_V5E, lm_workload_meta,
+                                   step_cost, step_cost_features)
 from repro.core.planner import compile_plan, mesh_for_strategy
 from repro.data.pipeline import DataCfg, TokenPipeline
 from repro.optim.optimizer import Schedule, adamw, adafactor
 from repro.runtime.elastic import (ElasticContext, HostTopology,
                                    plan_for_cluster)
 from repro.runtime.fault_tolerance import FaultTolerantLoop
-from repro.runtime.faults import FaultInjector, SlowHost, CrashStep
+from repro.runtime.faults import (FaultInjector, SlowHost, CrashStep,
+                                  DriftHost)
+from repro.runtime.profiler import Profiler
 from repro.runtime.straggler import (HostStragglerAggregator,
                                      StragglerMonitor)
 
@@ -60,6 +63,28 @@ def parse_mesh(spec: str, *, stage: int = 1):
     if len(dims) == 2:
         return jax.make_mesh(dims, ("data", "model"))
     return jax.make_mesh(dims, ("pod", "data", "model"))
+
+
+@dataclasses.dataclass
+class CalibrationConfig:
+    """Knobs for the drift-triggered rebalance loop (DESIGN.md §10).
+
+    The controller anchors the cost model's time scale to the first
+    ``min_steps`` measured steps of each plan (median measured / predicted
+    — absorbing the simulated clock's arbitrary units and constant
+    modelling bias), then watches the *relative* skew
+    ``measured / (predicted · anchor)``.  ``patience`` consecutive steps
+    above ``1 + skew`` trigger a recalibration: the profiler's windowed
+    observations re-fit each group's ``Hardware`` table and
+    ``ElasticContext.rebalance(hardware=...)`` re-plans with measured
+    rates — no host is evicted.  ``max_rebalances=0`` records
+    observations (``--profile``) without ever rebalancing.
+    """
+    skew: float = 0.25
+    patience: int = 5
+    min_steps: int = 8
+    window: int = 256               # observations per group fed to each fit
+    max_rebalances: int = 2
 
 
 @dataclasses.dataclass
@@ -76,6 +101,8 @@ class ElasticConfig:
         # stay in the checkpoint's non-pipelined parameter layout: a live
         # re-plan into a padded pipeline layout would need a migration
         default_factory=lambda: {"max_pp": 1})
+    # predicted-vs-measured drift detection (None = off)
+    calibration: CalibrationConfig | None = None
 
 
 class TrainController:
@@ -125,6 +152,8 @@ class TrainController:
         self.phase = "TRAINING"
         self.events: list = []
         self.losses: list = []
+        self.calibration = elastic.calibration
+        self.profiler = Profiler()
         self.aggregator = HostStragglerAggregator(
             n_hosts=len(self.topology.hosts),
             threshold=elastic.threshold, patience=elastic.patience,
@@ -150,6 +179,121 @@ class TrainController:
             devices=self.topology.devices(jax.devices()),
             overlap=self.elastic.overlap, search_kw=self.elastic.search_kw)
         return plan, float(cand.total)
+
+    def _predicted_total(self, plan) -> float:
+        """The cost model's step-time prediction for the current plan."""
+        if plan.placement is not None:
+            return float(plan.placement.cost.total)
+        g = self.topology.cluster_spec().groups[0]
+        return float(step_cost(self.meta, plan.strategy, g.hw,
+                               overlap=self.elastic.overlap).total)
+
+    def _group_features(self, plan) -> dict:
+        """Per device group: (calibration features, predicted s, hosts).
+
+        The features (``cost_model.step_cost_features`` of the group's
+        unit of work) are what the profiler attaches to each measured
+        group step time, so ``calibrate.fit`` can invert them back into
+        ``Hardware`` rates.
+        """
+        members = self.topology.group_hosts()
+        ov = self.elastic.overlap
+        out = {}
+        if plan.placement is not None:
+            for u in plan.placement.units:
+                if u.kind != "group":
+                    continue
+                out[u.group.name] = (
+                    step_cost_features(u.meta, u.strategy, u.group.hw,
+                                       overlap=ov),
+                    float(u.cost.total), members.get(u.group.name, []))
+        else:
+            g = self.topology.cluster_spec().groups[0]
+            out[g.name] = (
+                step_cost_features(self.meta, plan.strategy, g.hw,
+                                   overlap=ov),
+                float(step_cost(self.meta, plan.strategy, g.hw,
+                                overlap=ov).total),
+                members.get(g.name, list(self.topology.host_ids)))
+        return out
+
+    def _retune_model(self, spec) -> None:
+        """Re-autotune kernel tiles for ``spec`` and rebuild the model.
+
+        Plans re-run the tile autotuner inside ``compile_plan``, but the
+        *executing model* bakes block sizes into its config at startup —
+        after a rebalance changes the hardware mix (eviction) or the
+        rates (recalibration), those baked tiles are stale.  Tiles don't
+        change parameter shapes, so the rebuilt model restores the same
+        checkpoint.
+        """
+        cfg = self.cfg
+        if "pallas" not in (cfg.attn_impl, cfg.xent_impl, cfg.ssd_impl):
+            return
+        if not getattr(cfg, "n_heads", 0):
+            return
+        from repro.kernels.autotune import DEFAULT_TILES, autotune_cluster
+        tiles_by_group = autotune_cluster(
+            spec, head_dim=cfg.hd,
+            group=cfg.n_heads // max(cfg.n_kv_heads, 1) or 1,
+            d_model=cfg.d_model, vocab=cfg.padded_vocab)
+        tiles = list(tiles_by_group.values())
+        lo = tiles[0] if tiles else DEFAULT_TILES
+        for t in tiles[1:]:                 # min over groups: fits everywhere
+            lo = dataclasses.replace(lo, **{
+                f.name: min(getattr(lo, f.name), getattr(t, f.name))
+                for f in dataclasses.fields(t)})
+        new_cfg = dataclasses.replace(
+            cfg, attn_block_q=lo.block_q, attn_block_k=lo.block_k,
+            xent_block_t=lo.xent_block_t, xent_block_v=lo.xent_block_v,
+            ssd_chunk=(lo.ssd_chunk if cfg.family in ("ssm", "hybrid")
+                       else cfg.ssd_chunk))
+        if new_cfg != cfg:
+            from repro.models.lm import build
+            self.cfg = new_cfg
+            self.model = build(new_cfg)
+            self._event("retune", tiles=str(lo))
+            self._log(f"[retune] kernel tiles re-sized for "
+                      f"{'+'.join(g.name for g in spec.groups)}: {lo}")
+
+    # --------------------------------------------- drift detection (§10)
+    def _observe_calibration(self, i, times, cal, feats, predicted,
+                             loop, pending) -> None:
+        """Feed the profiler and watch predicted-vs-measured skew.
+
+        First ``min_steps`` measured steps of a plan anchor the model's
+        time scale; afterwards each step records per-group observations
+        (in anchored units, so fitted tables stay comparable to the
+        priors) and ``patience`` consecutive steps with skew above
+        ``1 + skew`` stop the segment for a recalibrating rebalance.
+        """
+        cfg = self.calibration
+        measured = max(times.values())
+        cal["n"] += 1
+        if cal["n"] <= cfg.min_steps:
+            cal["sum"] += measured
+            if cal["n"] == cfg.min_steps:
+                cal["anchor"] = (cal["sum"] / cfg.min_steps) / predicted
+            return
+        anchor = cal["anchor"]
+        for gname, (f, _p, members) in feats.items():
+            t_g = max((times[h] for h in members if h in times), default=0.0)
+            if t_g > 0.0:
+                self.profiler.record_step(gname, t_g / anchor, f, step=i)
+        skew = measured / (predicted * anchor)
+        if skew > 1.0 + cfg.skew:
+            cal["hot"] += 1
+        else:
+            cal["hot"] = 0
+        if (cal["hot"] >= cfg.patience and not pending
+                and cal["trigger"] is None
+                and self._recalibrations < cfg.max_rebalances):
+            cal["trigger"] = skew
+            self.phase = "DEGRADED"
+            self._log(f"[drift] measured/predicted skew {skew:.2f} "
+                      f"sustained {cfg.patience} steps at step {i}; "
+                      f"stopping to recalibrate")
+            loop.request_stop()
 
     def _build_step_fn(self, plan):
         batch0 = {k: jnp.asarray(v) for k, v in self._peek_batch().items()}
@@ -224,14 +368,23 @@ class TrainController:
         state = {"params": params, "opt": opt_state}
 
         rebalances = 0
+        self._recalibrations = 0
         while step < n_steps:
             pending: list = []
             segment_start = step
+            # drift detection state for this plan segment: the anchor maps
+            # the cost model's time scale onto the measured clock, so the
+            # skew watched below is relative to *this plan's* own baseline
+            cal = {"n": 0, "sum": 0.0, "anchor": None, "hot": 0,
+                   "trigger": None}
+            feats = self._group_features(plan) if self.calibration else {}
+            predicted = self._predicted_total(plan)
             loop = FaultTolerantLoop(self.ckpt, save_every=self.save_every,
                                      max_retries=self.max_retries)
 
             def on_step(i, st, dt, _loop=loop, _pending=pending,
-                        _start=segment_start):
+                        _start=segment_start, _cal=cal, _feats=feats,
+                        _pred=predicted):
                 if i == _start:
                     return          # jit-compile step would poison warmup
                 hosts = self.topology.host_ids
@@ -241,6 +394,9 @@ class TrainController:
                     # single-process: every host reports the global step
                     # time; a real fleet reports per-host measurements
                     times = {h: dt for h in hosts}
+                if self.calibration is not None and _pred > 0.0:
+                    self._observe_calibration(i, times, _cal, _feats, _pred,
+                                              _loop, _pending)
                 for h in self.aggregator.observe(times):
                     self._event("flag", step=i, host=h, dt=times[h],
                                 mean=self.aggregator.monitors[h].mean
@@ -279,39 +435,67 @@ class TrainController:
                 self._log(f"[preempt] SIGTERM at step {step}; final "
                           f"checkpoint committed")
                 break
-            if not pending or step >= n_steps:
+            if (not pending and cal["trigger"] is None) or step >= n_steps:
                 # n_steps reached — a flag raised on the very last step
                 # must not trigger a rebalance whose result is discarded
                 break
-            # ---- evict + rebalance + resume ----
             self.phase = "REBALANCING"
-            for h in pending:
-                self.aggregator.evict(h)
-            self.topology = self.topology.without(set(pending))
-            spec = self.topology.cluster_spec()
-            self._event("evict", step=step, hosts=list(pending),
-                        surviving_devices=self.topology.n_devices)
-            self._log(f"[evict] hosts {pending} at step {step}; "
-                      f"rebalancing onto {self.topology.n_devices} devices")
+            hardware = None
+            if pending:
+                # ---- evict + rebalance + resume ----
+                for h in pending:
+                    self.aggregator.evict(h)
+                self.topology = self.topology.without(set(pending))
+                spec = self.topology.cluster_spec()
+                self._event("evict", step=step, hosts=list(pending),
+                            surviving_devices=self.topology.n_devices)
+                self._log(f"[evict] hosts {pending} at step {step}; "
+                          f"rebalancing onto {self.topology.n_devices} "
+                          f"devices")
+            else:
+                # ---- drift-triggered recalibration: same fleet, re-fitted
+                # Hardware tables — continuous rebalancing (DESIGN.md §10)
+                spec = self.topology.cluster_spec()
+                cal_spec, hardware = self.profiler.fit_spec(
+                    spec, last_n=self.calibration.window)
+                spec = cal_spec
+                self._event("drift", step=step, skew=cal["trigger"],
+                            hardware={
+                                n: {"eff_flops":
+                                    h.peak_flops * h.mxu_eff,
+                                    "n_obs": h.n_observations}
+                                for n, h in hardware.items()})
+                self._log(f"[drift] recalibrating at step {step} "
+                          f"(skew {cal['trigger']:.2f}); re-planning with "
+                          f"measured rates")
+            # stale-tiles fix: the executing model baked kernel tiles for
+            # the old mix/rates — re-autotune before re-meshing
+            self._retune_model(spec)
             ectx = ElasticContext(model=self.model, optimizer=self.optimizer)
             t0 = time.monotonic()
             step, plan, params, opt_state, extra = ectx.rebalance(
-                self.ckpt, spec, self.meta,
+                self.ckpt, self.topology.cluster_spec(), self.meta,
                 devices=self.topology.devices(jax.devices()),
                 overlap=self.elastic.overlap,
-                search_kw=self.elastic.search_kw)
+                search_kw=self.elastic.search_kw,
+                hardware=hardware)
             if "data" in extra:
                 self.data.load_state_dict(extra["data"])
             self._batch_step, self._batch = step - 1, None
             state = {"params": params, "opt": opt_state}
-            rebalances += 1
+            kind = "rebalance" if pending else "recalibrate"
+            if pending:
+                rebalances += 1
+                self.profiler.clear()   # old groups' names/shares are stale
+            else:
+                self._recalibrations += 1
             self.aggregator.reset(self.topology.host_ids)
-            self._event("rebalance", step=step,
+            self._event(kind, step=step,
                         strategy=plan.strategy.describe(),
                         downtime_s=time.monotonic() - t0,
                         placement=(plan.placement.describe()
                                    if plan.placement else None))
-            self._log(f"[rebalance] resumed at step {step} with "
+            self._log(f"[{kind}] resumed at step {step} with "
                       f"{plan.strategy.describe()}")
             self.phase = "TRAINING"
         if self.phase not in ("FAILED", "PREEMPTED") and step >= n_steps:
@@ -321,7 +505,7 @@ class TrainController:
                 "topology": self.topology}
 
 
-def _parse_injections(slow: list, crash: list) -> tuple:
+def _parse_injections(slow: list, crash: list, drift: list = ()) -> tuple:
     scenarios = []
     for s in slow or []:
         host, start, factor = s.split(":")
@@ -332,6 +516,10 @@ def _parse_injections(slow: list, crash: list) -> tuple:
         scenarios.append(CrashStep(step=int(bits[0]),
                                    times=int(bits[1]) if len(bits) > 1
                                    else 1))
+    for d in drift or []:
+        host, start, end, factor = d.split(":")
+        scenarios.append(DriftHost(host=int(host), start_step=int(start),
+                                   end_step=int(end), factor=float(factor)))
     return tuple(scenarios)
 
 
@@ -392,6 +580,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--patience", type=int, default=3)
     ap.add_argument("--straggler-warmup", type=int, default=3)
     ap.add_argument("--max-rebalances", type=int, default=2)
+    # ---- profile-calibrated cost model (DESIGN.md §10) ----
+    ap.add_argument("--profile", action="store_true",
+                    help="record per-group step observations against the "
+                         "cost model's features and print the fitted "
+                         "calibration report at exit")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="drift-triggered continuous rebalancing: compare "
+                         "predicted vs measured step cost and rebalance "
+                         "with the re-fitted ClusterSpec when skew exceeds "
+                         "--drift-skew (needs --hosts)")
+    ap.add_argument("--drift-skew", type=float, default=0.25,
+                    help="relative skew that triggers recalibration")
+    ap.add_argument("--drift-patience", type=int, default=5,
+                    help="sustained skewed steps before recalibrating")
+    ap.add_argument("--inject-drift", action="append", default=[],
+                    metavar="HOST:START:END:FACTOR",
+                    help="fault injection: HOST ramps linearly to FACTOR× "
+                         "slower between START and END (repeatable)")
     args = ap.parse_args(argv)
 
     if args.distributed:
@@ -445,27 +651,41 @@ def main(argv=None) -> dict:
             raise SystemExit(f"--hosts {args.hosts} must divide the "
                              f"device count ({n})")
         topology = HostTopology.uniform(args.hosts, n // args.hosts, TPU_V5E)
-        scenarios = _parse_injections(args.inject_slow, args.inject_crash)
+        scenarios = _parse_injections(args.inject_slow, args.inject_crash,
+                                      args.inject_drift)
         # nominal clock: injected scenarios play on a fully simulated
         # timeline, so detection is deterministic regardless of machine
         # load (a real deployment feeds measured per-host times instead)
         injector = (FaultInjector(scenarios=scenarios, n_hosts=args.hosts,
                                   seed=args.seed, nominal=0.05)
                     if scenarios else None)
+        calibration = None
+        if args.calibrate:
+            calibration = CalibrationConfig(
+                skew=args.drift_skew, patience=args.drift_patience,
+                max_rebalances=args.max_rebalances)
+        elif args.profile:
+            # record + report only: never trigger a rebalance
+            calibration = CalibrationConfig(max_rebalances=0)
         ctl = TrainController(
             model, cfg, opt, data, ckpt,
             elastic=ElasticConfig(topology=topology,
                                   patience=args.patience,
                                   warmup=args.straggler_warmup,
-                                  max_rebalances=args.max_rebalances),
+                                  max_rebalances=args.max_rebalances,
+                                  calibration=calibration),
             batch=args.batch, seq=args.seq, save_every=args.save_every,
             injector=injector, log_every=args.log_every)
         out = ctl.run(args.steps, seed=args.seed)
+        if args.profile:
+            print(ctl.profiler.report(ctl.topology.cluster_spec()))
         evictions = [e for e in out["events"] if e["kind"] == "evict"]
+        recals = [e for e in out["events"] if e["kind"] == "recalibrate"]
         loss_str = (f", loss {out['losses'][0]:.4f} → {out['losses'][-1]:.4f}"
                     if out["losses"] else " (resumed already complete)")
         print(f"[done] step {out['final_step']} phase {out['phase']}, "
-              f"{len(evictions)} eviction(s){loss_str}")
+              f"{len(evictions)} eviction(s), "
+              f"{len(recals)} recalibration(s){loss_str}")
         return {"final_step": out["final_step"], "losses": out["losses"],
                 "events": out["events"], "phase": out["phase"]}
 
@@ -557,6 +777,17 @@ def main(argv=None) -> dict:
           f"{dict(mesh.shape)}, {args.steps} steps")
 
     monitor = StragglerMonitor()
+    profiler = None
+    if args.profile:
+        # whole-step observations against the executed strategy's feature
+        # vector on the --hw table; the exit report shows how far the
+        # hand-written rates are from this machine's measured ones
+        from repro.core import cost_model as _cm
+        prof_hw = {"tpu_v5e": _cm.TPU_V5E, "v100": _cm.V100_PAPER,
+                   "p100": _cm.P100_16G, "t4": _cm.T4_16G}[args.hw]
+        prof_meta = lm_workload_meta(cfg, batch=args.batch, seq=args.seq)
+        prof_feats = step_cost_features(prof_meta, plan.strategy, prof_hw)
+        profiler = Profiler()
     losses = []
     state0 = {"params": params, "opt": opt_state}
     if args.compress_pod and "pod" in mesh.shape:
@@ -584,6 +815,8 @@ def main(argv=None) -> dict:
         return new
 
     def on_step(i, st, dt):
+        if profiler is not None and i > start_step:
+            profiler.record_step(prof_hw.name, dt, prof_feats, step=i)
         if monitor.observe(dt):       # one-shot: True on the flag transition
             print(f"[straggler] flagged at step {i} "
                   f"(dt={dt:.3f}s vs mean {monitor.mean:.3f}s)")
@@ -596,6 +829,10 @@ def main(argv=None) -> dict:
         extra_fn=lambda st, s: {"data": data_state_at(s)},
         on_step=on_step)
 
+    if profiler is not None:
+        from repro.core.cost_model import ClusterSpec
+        print(profiler.report(ClusterSpec.homogeneous(prof_hw,
+                                                      len(jax.devices()))))
     loss_str = (f", loss {losses[0]:.4f} → {losses[-1]:.4f}" if losses
                 else " (resumed already complete)")
     print(f"[done] step {final_step}{loss_str}")

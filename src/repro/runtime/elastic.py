@@ -115,7 +115,8 @@ class ElasticContext:
                   cluster_spec: ClusterSpec,
                   workload_meta: WorkloadMeta, *, new_mesh=None,
                   devices=None, overlap: float = 0.5,
-                  search_kw: dict | None = None):
+                  search_kw: dict | None = None,
+                  hardware: dict | None = None):
         """Re-mesh onto a **different hardware mix**.
 
         Runs the heterogeneity-aware strategy search over ``cluster_spec``
@@ -138,8 +139,18 @@ class ElasticContext:
         ``max_pp=1`` to stay in the checkpoint's non-pipelined parameter
         layout — pipelined plans pad params per stage, so a live re-plan
         across that boundary would need a layout migration).
+
+        ``hardware`` maps device-group names to replacement ``Hardware``
+        tables (typically :class:`~repro.core.calibrate.CalibratedHardware`
+        from the profiler): the search and the resulting placement then
+        price with *measured* rates — the drift-triggered continuous
+        rebalance path (DESIGN.md §10).  Groups not named keep their
+        prior table.
         """
         from repro.core.planner import mesh_for_strategy
+        if hardware:
+            from repro.core.calibrate import refit_spec
+            cluster_spec = refit_spec(cluster_spec, hardware)
         cand = search_cluster(workload_meta, cluster_spec, overlap=overlap,
                               search_kw=search_kw)
         strat = cand.strategy
@@ -276,6 +287,19 @@ class HostTopology:
                 groups.append(DeviceGroup(
                     f"{h.hw.name}#{len(groups)}", h.hw, h.n_devices))
         return ClusterSpec(groups=tuple(groups))
+
+    def group_hosts(self) -> dict:
+        """``cluster_spec()`` group name → member host ids (same merge)."""
+        out: dict = {}
+        names: list = []
+        for h in self.hosts:
+            if names and names[-1][0] == h.hw.name:
+                out[names[-1][1]].append(h.host)
+            else:
+                gname = f"{h.hw.name}#{len(names)}"
+                names.append((h.hw.name, gname))
+                out[gname] = [h.host]
+        return out
 
     def without(self, evicted: set) -> "HostTopology":
         """The surviving topology after evicting ``evicted`` hosts."""

@@ -10,6 +10,9 @@ be exercised end-to-end in a single process:
 - :class:`SlowHost` — one host's step time is inflated by ``factor`` from
   ``start_step`` (optionally until ``end_step``): the failing-HBM /
   thermal-throttle / noisy-neighbour case that straggler eviction targets.
+- :class:`DriftHost` — a *gradual* linear slowdown ramp that stays under
+  the straggler monitor's outlier threshold; the case that drift-triggered
+  recalibration (DESIGN.md §10) catches and one-shot eviction does not.
 - :class:`CrashStep` — the step function raises a transient
   ``RuntimeError`` ``times`` times at ``step`` (DCN flake, preempted
   reduction); exercised against :class:`FaultTolerantLoop`'s bounded
@@ -42,6 +45,30 @@ class SlowHost:
     def active(self, step: int) -> bool:
         return (step >= self.start_step
                 and (self.end_step is None or step < self.end_step))
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftHost:
+    """Host ``host`` slows *gradually*: 1× at ``start_step`` ramping
+    linearly to ``factor``× at ``end_step``, then holding.
+
+    The calibration adversary (DESIGN.md §10): a slow ramp stays inside
+    the straggler monitor's outlier band at every individual step (the
+    EMA tracks the drift), so one-shot eviction never fires — only the
+    predicted-vs-measured skew accumulated by the profiler exposes it.
+    """
+    host: int
+    start_step: int
+    end_step: int
+    factor: float = 3.0
+
+    def factor_at(self, step: int) -> float:
+        if step <= self.start_step:
+            return 1.0
+        if step >= self.end_step:
+            return self.factor
+        frac = (step - self.start_step) / (self.end_step - self.start_step)
+        return 1.0 + frac * (self.factor - 1.0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,6 +118,8 @@ class FaultInjector:
         for s in self.scenarios:
             if isinstance(s, SlowHost) and s.host == host and s.active(step):
                 f *= s.factor
+            elif isinstance(s, DriftHost) and s.host == host:
+                f *= s.factor_at(step)
         return f
 
     def host_times(self, step: int, base: float = 1.0,

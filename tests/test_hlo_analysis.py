@@ -70,3 +70,59 @@ def test_real_compiled_module_roundtrip():
     assert traffic >= 5 * 2 * 64 * 64 * 4
     colls = collective_bytes(hlo, 1)
     assert colls["total"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# dtype sizing: every width explicit, unknowns refuse to guess
+# ---------------------------------------------------------------------------
+
+def test_dtype_bytes_covers_model_emitted_dtypes():
+    from repro.launch.hlo_analysis import dtype_bytes
+    widths = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+              "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+              "pred": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+              "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e5m2": 1, "f8e5m2fnuz": 1}
+    for dt, want in widths.items():
+        assert dtype_bytes(dt) == want, dt
+
+
+def test_dtype_bytes_zero_sized_tokens():
+    from repro.launch.hlo_analysis import dtype_bytes
+    assert dtype_bytes("token") == 0
+    assert dtype_bytes("opaque") == 0
+
+
+def test_dtype_bytes_raises_on_unknown():
+    """The pre-fix accountant defaulted unknown dtypes to 4 bytes — a
+    silent 2–8× skew on any bf16/f8 buffer it mis-parsed.  Unknowns must
+    fail loudly instead."""
+    from repro.launch.hlo_analysis import dtype_bytes
+    with pytest.raises(ValueError, match="unknown HLO dtype"):
+        dtype_bytes("f128")
+    with pytest.raises(ValueError, match="_DTYPE_BYTES"):
+        dtype_bytes("bfloat16")     # the jnp spelling, not the HLO one
+
+
+def test_shape_bytes_on_bf16_collective():
+    """A bf16 all-reduce is half the f32 volume — the case the 4-byte
+    default silently doubled."""
+    hlo_f32 = SYNTH
+    hlo_bf16 = SYNTH.replace("f32[", "bf16[")
+    f32 = collective_bytes(hlo_f32, 32)["total"]
+    b16 = collective_bytes(hlo_bf16, 32)["total"]
+    assert b16 == pytest.approx(f32 / 2)
+
+
+def test_shape_bytes_token_operands_cost_nothing():
+    hlo = textwrap.dedent("""\
+        HloModule tok
+
+        ENTRY %main (a: f32[8]) -> f32[8] {
+          %a = f32[8] parameter(0)
+          %t = token[] after-all()
+          %ar = f32[8] all-reduce(%a), replica_groups={{0,1}}
+          ROOT %out = f32[8] copy(%ar)
+        }
+    """)
+    out = collective_bytes(hlo, 2)
+    assert out["all-reduce"] == pytest.approx(2 * (1 / 2) * 8 * 4)

@@ -15,7 +15,8 @@ import pytest
 
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
-                                   T4_16G, TPU_V5E, V100_PAPER)
+                                   StrategySpec, T4_16G, TPU_V5E,
+                                   V100_PAPER)
 from repro.core.hetero import shrink_cluster
 from repro.data.pipeline import DataCfg, TokenPipeline
 from repro.runtime.elastic import HostTopology, SimHost, shrink_devices
@@ -544,3 +545,104 @@ def test_preemption_checkpoint_and_resume(tmp_path):
         assert Recording.seen == want, (len(Recording.seen), len(want))
         print("OK preempt at 6, resumed to", out2["final_step"])
     """)
+
+
+# ---------------------------------------------------------------------------
+# aggregator reset: the evicted set stays authoritative
+# ---------------------------------------------------------------------------
+
+def test_aggregator_reset_never_resurrects_evicted():
+    """``reset(hosts)`` with a stale host list that still names an evicted
+    host (e.g. a caller passing the pre-eviction ids) must not rebuild a
+    monitor for it — an evicted host's heartbeats can keep arriving for a
+    few steps and must never re-flag it."""
+    agg = HostStragglerAggregator(n_hosts=3, threshold=2.0, patience=1,
+                                  warmup=2)
+    agg.evict(1)
+    agg.reset([0, 1, 2])                    # 1 is evicted: must stay out
+    assert set(agg.monitors) == {0, 2}
+    for t in ({0: 1.0, 1: 1.0, 2: 1.0},) * 2:
+        assert agg.observe(t) == []
+    # a blatant outlier from the evicted host is silently ignored forever
+    assert agg.observe({0: 1.0, 1: 50.0, 2: 1.0}) == []
+    assert 1 not in agg.monitors and agg.evicted == {1}
+    # default reset() (no host list) keeps the exclusion too
+    agg.reset()
+    assert set(agg.monitors) == {0, 2}
+
+
+def test_aggregator_reset_after_rebalance_rearms_survivors():
+    """Post-rebalance reset gives survivors *fresh* monitors (step times
+    change shape under the new plan) while keeping eviction permanent."""
+    agg = HostStragglerAggregator(n_hosts=2, threshold=2.0, patience=1,
+                                  warmup=2)
+    for t in ({0: 1.0, 1: 1.0},) * 2:
+        agg.observe(t)
+    assert agg.observe({0: 1.0, 1: 9.0}) == [1]
+    agg.evict(1)
+    agg.reset([0])
+    assert agg.monitors[0].n == 0           # fresh stats, not carried over
+    for t in ({0: 3.0},) * 2:               # new plan: slower baseline is OK
+        assert agg.observe(t) == []
+    assert agg.observe({0: 3.1}) == []
+
+
+# ---------------------------------------------------------------------------
+# kernel tiles across a hardware-mix-changing rebalance (stale-tiles fix)
+# ---------------------------------------------------------------------------
+
+def _tile_cfg():
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    return dc.replace(get_config("tinyllama-1.1b", smoke=True), n_layers=2,
+                      attn_impl="pallas")
+
+
+def test_plan_tiles_change_across_mix_changing_rebalance():
+    """Re-planning after evicting the quarter-VMEM P100 group must re-run
+    the autotuner: the conservative cross-group tiling gives way to the
+    V100's larger blocks.  (A plan carrying the old tiles would run the
+    survivors at the evicted part's geometry forever.)"""
+    from repro.core.planner import compile_plan, mesh_for_strategy
+    from repro.models.lm import build
+    cfg = _tile_cfg()
+    model = build(cfg)
+    mixed = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 4),
+                                DeviceGroup("p100", P100_16G, 4)))
+    survivors = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 4),))
+    mesh = mesh_for_strategy(StrategySpec(dp=1))
+    before = compile_plan(model, mesh, cluster_spec=mixed)
+    after = compile_plan(model, mesh, cluster_spec=survivors)
+    assert before.tiles_for(None) != after.tiles_for(None)
+    assert after.tiles_for(None).block_q > before.tiles_for(None).block_q
+    assert set(after.kernel_tiles) == {"v100"}
+
+
+def test_controller_retunes_baked_tiles_on_mix_change(tmp_path):
+    """The regression the drift loop exposed: plans re-autotune, but the
+    *executing model* bakes tile block sizes into its config at startup.
+    ``_retune_model`` must re-size them when the hardware mix changes and
+    emit a ``retune`` event."""
+    from repro.launch.train import ElasticConfig, TrainController
+    from repro.models.lm import build
+    from repro.optim import adamw
+    cfg = _tile_cfg()
+    topo = HostTopology(hosts=(SimHost(0, V100_PAPER, 2),
+                               SimHost(1, P100_16G, 2)))
+    ctl = TrainController(
+        build(cfg), cfg, adamw(lr=1e-3),
+        TokenPipeline(DataCfg(global_batch=8, seq_len=64, vocab=cfg.vocab,
+                              seed=0)),
+        CheckpointManager(str(tmp_path / "tiles"), keep=1),
+        elastic=ElasticConfig(topology=topo), batch=8, seq=64,
+        verbose=False)
+    ctl._retune_model(topo.cluster_spec())
+    q_mixed = ctl.cfg.attn_block_q          # capped by the P100's 4 MiB VMEM
+    ctl._retune_model(ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER,
+                                                      4),)))
+    q_survivor = ctl.cfg.attn_block_q
+    assert q_survivor > q_mixed, (q_mixed, q_survivor)
+    assert any(e["kind"] == "retune" for e in ctl.events), ctl.events
+    # the rebuilt model carries the new tiles (same parameter shapes)
+    assert ctl.model.cfg.attn_block_q == q_survivor
