@@ -1,7 +1,7 @@
 """CI benchmark-regression gate: run the analytic benchmarks, record the
 headline numbers, fail on regression below the recorded floors.
 
-    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR8.json]
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR9.json]
 
 The analytic (cost-model / simulated-clock) benchmarks are deterministic —
 pure arithmetic over hardware tables, no execution, no timing noise — so
@@ -35,9 +35,13 @@ floor:
     calibration_continuous_vs_oneshot >= 1.3  (drift-triggered rebalance
                                        vs one-shot on the slow-drift
                                        scenario, benchmarks.fig_calibration)
+    fig10_auto_vs_even       >= 1.2   (segment-aware auto-search vs the
+                                       hand-even pipeline split on the
+                                       multimodal encdec flagship,
+                                       benchmarks.fig10_multimodal)
 
 Floors are deliberately below the current values (2.77 / 2.66 / 1.98 /
-2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51 / 1.36) so legitimate
+2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51 / 1.36 / 1.90) so legitimate
 refinements have headroom, while a change that destroys a headline win
 (the balancer, the schedule memory model, the ep pricing, the eviction
 loop, the kernel tiling/autotuner, the serving router/simulator, the
@@ -67,6 +71,7 @@ FLOORS = {
     "kernel_xent_footprint_min": 5.0,
     "serve_tokens_per_s_ratio": 1.3,
     "calibration_continuous_vs_oneshot": 1.3,
+    "fig10_auto_vs_even": 1.2,
 }
 
 
@@ -134,6 +139,12 @@ def collect() -> dict:
     out["calibration_drift_fit_error"] = fcal["drift_fit_error"]
     out["calibration_rebalances"] = fcal["continuous_rebalances"]
     out["calibration_curve"] = fcal["curve"]
+
+    # ---- fig10: segment-aware auto-search on the M6 multimodal
+    # workloads (runs its own assertions against the graph invariants) ----
+    import benchmarks.fig10_multimodal as fig10
+    f10 = fig10.main(csv=False)
+    out.update({k: v for k, v in f10.items()})
 
     # ---- kernel speed pass: roofline speedups + interpret numerics ----
     import benchmarks.kernel_bench as kb
@@ -204,12 +215,21 @@ def gate(metrics: dict) -> list:
     if metrics.get("calibration_rebalances", 0) < 1:
         failures.append("the continuous arm never recalibrated on the "
                         "drift scenario (calibration_rebalances < 1)")
+    # segment awareness must be free: erasing boundaries (the flat meta)
+    # can never beat the graph-aware search
+    if metrics.get("fig10_graph_vs_flat_min", 0.0) < 1.0 - 1e-9:
+        failures.append("graph-aware auto-search lost to the flattened "
+                        "WorkloadMeta search (fig10_graph_vs_flat_min < 1)")
+    if not metrics.get("fig10_jamba_auto_feasible"):
+        failures.append("the auto-search no longer finds a feasible plan "
+                        "for jamba-v0.1-52b on 32 mixed cards "
+                        "(fig10_jamba_auto_feasible)")
     return failures
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR8.json")
+    ap.add_argument("--out", default="BENCH_PR9.json")
     args = ap.parse_args(argv)
     metrics = collect()
     with open(args.out, "w") as f:

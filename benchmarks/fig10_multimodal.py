@@ -1,0 +1,147 @@
+"""Fig. 10 — segment-aware auto-search on the M6 multimodal workloads.
+
+Whale's M6 case study (paper §5.3): industrial multimodal models — a
+frontend feeding an encoder feeding a decoder, with wildly different
+per-layer arithmetic in each tower — on mixed GPU pools.  A hand-tuned
+"even" pipeline split (same layer count per stage, even batch shares)
+prices every stage as if the model were homogeneous; the segment-aware
+:class:`~repro.core.cost_model.ModelGraph` lets the planner see the real
+per-segment costs, so stage boundaries land where the work actually is.
+
+Three workloads on the mixed V100+T4 cluster, all from the analytic cost
+model (meta-driven — nothing executes):
+
+- ``seamless-m4t-medium`` (speech encdec): audio-frontend → 12-layer
+  encoder → 12-layer decoder.  The decoder's cross-attention + LM head
+  make its layers ~2× an encoder layer — the even split starves the
+  fast cards and the headline speedup comes from re-cutting the towers.
+- ``qwen2-vl-2b`` (vlm): atomic vision-frontend prefix + 28 decoder
+  layers; the search may cut anywhere except inside the frontend.
+- ``jamba-v0.1-52b`` (MoE hybrid, 52B): on 32 mixed cards the hand-even
+  split does not fit at all (inf) — only the searched plan (pipeline ×
+  sharded-DP × adafactor) is feasible.  "Auto finds a plan where the
+  hand split cannot" is the Whale giant-model claim in one row.
+
+Sanity anchors asserted in :func:`main`:
+
+- segment-aware auto ≥ 1.2× the hand-even split on seamless (measured
+  ≈2.6×);
+- segment-aware auto is never worse than auto on the flattened
+  :class:`~repro.core.cost_model.WorkloadMeta` of the same model (the
+  flat meta is the graph with its boundaries erased);
+- balanced placement of the SAME hand strategy already beats even (the
+  graph's layer costs feed :func:`~repro.core.hetero.balance_stages`).
+
+Output: CSV rows ``fig10,<model>,<even_ms>,<auto_ms>,<speedup>,<strategy>``.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.auto import search
+from repro.core.cost_model import (ClusterSpec, DeviceGroup, StrategySpec,
+                                   T4_16G, V100_PAPER)
+from repro.core.hetero import plan_placement
+from repro.models.lm import model_graph
+
+MIXED_16 = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 8),
+                               DeviceGroup("t4", T4_16G, 8)))
+MIXED_32 = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 16),
+                               DeviceGroup("t4", T4_16G, 16)))
+
+# (arch, batch, seq, cluster, hand StrategySpec for the even comparator)
+WORKLOADS = (
+    ("seamless-m4t-medium", 128, 256, MIXED_16,
+     StrategySpec(dp=4, pp=4, micro_batches=8)),
+    ("qwen2-vl-2b", 64, 1024, MIXED_16,
+     StrategySpec(dp=4, pp=4, micro_batches=8)),
+    ("jamba-v0.1-52b", 64, 1024, MIXED_32,
+     StrategySpec(dp=4, pp=8, micro_batches=16)),
+)
+
+
+def workload_rows(overlap: float = 0.5):
+    """One row per workload: (name, graph, even_s, balanced_s, auto_s,
+    auto_strategy, flat_auto_s)."""
+    out = []
+    for arch, batch, seq, spec, hand in WORKLOADS:
+        cfg = get_config(arch)
+        graph = model_graph(cfg, batch, seq)
+        even = plan_placement(graph, hand, spec, overlap=overlap,
+                              balanced=False)
+        balanced = plan_placement(graph, hand, spec, overlap=overlap)
+        cands = search(graph, spec, top_k=1, overlap=overlap)
+        auto_t = cands[0].total if cands else float("inf")
+        auto_desc = cands[0].strategy.describe() if cands else "infeasible"
+        flat = search(graph.workload_meta(), spec, top_k=1, overlap=overlap)
+        flat_t = flat[0].total if flat else float("inf")
+        out.append((arch, graph, even.step_time, balanced.step_time,
+                    auto_t, auto_desc, flat_t))
+    return out
+
+
+def main(csv: bool = True) -> dict:
+    rows = workload_rows()
+    out = []
+    for arch, graph, even_t, bal_t, auto_t, desc, flat_t in rows:
+        speed = even_t / auto_t
+        out.append(("fig10", arch, even_t * 1e3, auto_t * 1e3, speed, desc))
+        if csv:
+            print(f"# {graph.describe()}")
+    if csv:
+        print("table,model,even_ms,auto_ms,speedup,auto_strategy")
+        for r in out:
+            print(f"{r[0]},{r[1]},{r[2]:.1f},{r[3]:.1f},{r[4]:.2f},{r[5]}")
+
+    by = {r[0]: r for r in rows}
+
+    # headline: segment-aware auto beats the hand-even split on the
+    # multimodal encdec workload (measured ≈2.6×; floor 1.2× for CI)
+    arch, graph, even_t, bal_t, auto_t, desc, flat_t = by[
+        "seamless-m4t-medium"]
+    assert auto_t * 1.2 <= even_t, \
+        f"fig10 headline: auto {auto_t:.3f}s must beat even {even_t:.3f}s " \
+        f"by >= 1.2x on seamless-m4t-medium"
+    # mechanism check: balancing the SAME hand strategy from per-segment
+    # layer costs already beats the even split (and never loses)
+    assert bal_t <= even_t + 1e-9, \
+        "balanced placement of the hand strategy must never lose to even"
+    # the flat meta is the graph with boundaries erased: seeing segments
+    # must never cost the search anything
+    for arch2, _g, _e, _b, a_t, _d, f_t in rows:
+        if f_t != float("inf"):
+            assert a_t <= f_t + 1e-9, \
+                f"{arch2}: graph-aware auto ({a_t:.3f}s) must be <= " \
+                f"flat-meta auto ({f_t:.3f}s)"
+
+    # vlm row: auto must respect the atomic frontend and still win
+    _, _, q_even, _, q_auto, _, _ = by["qwen2-vl-2b"]
+    assert q_auto < q_even, "qwen2-vl: auto must beat the hand-even split"
+
+    # giant-model row: the hand split does not fit; the search must
+    # still find a feasible plan for the 52B MoE hybrid
+    _, _, j_even, _, j_auto, j_desc, _ = by["jamba-v0.1-52b"]
+    assert j_even == float("inf"), \
+        "jamba-v0.1-52b hand-even split unexpectedly fits 32x16GiB"
+    assert j_auto != float("inf"), \
+        "jamba-v0.1-52b: the auto-search must find a feasible plan"
+
+    if csv:
+        print(f"# headline: segment-aware auto {even_t / auto_t:.2f}x over "
+              f"hand-even split on seamless-m4t-medium ({desc}); "
+              f"jamba-52B feasible only via auto ({j_desc})")
+    return {
+        "fig10_auto_vs_even": even_t / auto_t,
+        "fig10_vlm_auto_vs_even": q_even / q_auto,
+        "fig10_balanced_vs_even": even_t / bal_t,
+        "fig10_graph_vs_flat_min": min(
+            f_t / a_t for _a, _g, _e, _b, a_t, _d, f_t in rows
+            if f_t != float("inf")),
+        "fig10_jamba_even_infeasible": j_even == float("inf"),
+        "fig10_jamba_auto_feasible": j_auto != float("inf"),
+        "fig10_step_ms": {r[1]: r[3] for r in out},
+        "fig10_auto_strategy": {r[1]: r[5] for r in out},
+    }
+
+
+if __name__ == "__main__":
+    main()

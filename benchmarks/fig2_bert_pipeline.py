@@ -30,7 +30,8 @@ import dataclasses
 
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
                                    StrategySpec, V100_PAPER,
-                                   lm_workload_meta, step_cost)
+                                   step_cost)
+from repro.models.lm import model_graph
 from repro.core.schedule import (bubble_fraction_closed_form,
                                  in_flight_micro_batches)
 
@@ -56,7 +57,7 @@ def model_rows(per_gpu_batch: int = 24, seq: int = 128):
     rows = []
     for gpus in (8, 16, 32, 64):
         batch = per_gpu_batch * gpus
-        meta = lm_workload_meta(cfg, batch=batch, seq=seq)
+        meta = model_graph(cfg, batch, seq).workload_meta()
         # Horovod DP: full-volume gradient all-reduce over shared Ethernet
         hdp = step_cost(meta, StrategySpec(dp=gpus, remat=False,
                                            vocab_split=False),
@@ -91,7 +92,7 @@ def schedule_grid_rows(per_gpu_batch: int = 24, seq: int = 128):
     spec = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 8),
                                DeviceGroup("p100", P100_16G, 8)))
     gpus, pp, M = 16, 4, 8
-    meta = lm_workload_meta(cfg, batch=per_gpu_batch * gpus, seq=seq)
+    meta = model_graph(cfg, per_gpu_batch * gpus, seq).workload_meta()
     rows = []
     for sched in ("gpipe", "1f1b"):
         for balanced in (False, True):

@@ -20,8 +20,9 @@ Output CSV: ``fig5,<system>,<gpus>,<batch_per_gpu>,<samples_per_s>,<speedup>``.
 """
 from __future__ import annotations
 
-from repro.core.cost_model import (StrategySpec, V100_PAPER, WorkloadMeta,
-                                   step_cost, throughput)
+from repro.core.cost_model import (ModelGraph, SegmentMeta, StrategySpec,
+                                   V100_PAPER, WorkloadMeta, step_cost,
+                                   throughput)
 
 RESNET_FLOPS = 4.1e9            # fwd FLOPs per 224×224 image
 FEAT_PARAMS = 90e6
@@ -35,20 +36,30 @@ ACT_BYTES_PER_IMG_LAYER = 3e6   # ≈150 MB fp32 activations/image over ~50
                                 # layers — the standard ResNet-50 footprint
 
 
-def classification_meta(batch: int) -> WorkloadMeta:
-    head_flops = 2 * batch * FEAT_DIM * N_CLASSES
-    return WorkloadMeta(
+def classification_graph(batch: int) -> ModelGraph:
+    """The paper's workload as a single-segment ModelGraph: the ResNet
+    feature tower is the (pipelineable) segment; the 100k-way head is
+    priced like an LM head — extra flops + non-layer params + logits."""
+    return ModelGraph(
         name="resnet50-100k",
-        fwd_flops=RESNET_FLOPS * batch + head_flops,
-        param_bytes=(FEAT_PARAMS + HEAD_PARAMS) * 4,
-        tp_shardable_param_bytes=HEAD_PARAMS * 4,
-        act_bytes_per_layer=batch * ACT_BYTES_PER_IMG_LAYER,
-        n_layers=50,
+        segments=(SegmentMeta(
+            name="resnet50", n_layers=50,
+            fwd_flops=RESNET_FLOPS * batch,
+            param_bytes=FEAT_PARAMS * 4,
+            act_bytes_per_layer=batch * ACT_BYTES_PER_IMG_LAYER),),
         batch=batch,
+        extra_fwd_flops=2 * batch * FEAT_DIM * N_CLASSES,
+        extra_param_bytes=HEAD_PARAMS * 4,
         logits_bytes=batch * N_CLASSES * 4,
         head_param_bytes=HEAD_PARAMS * 4,
         opt_state_factor=1.0,          # SGD + momentum (classification)
+        # only the head splits: fc+softmax over the class dim
+        tp_shardable_fraction=HEAD_PARAMS / (FEAT_PARAMS + HEAD_PARAMS),
     )
+
+
+def classification_meta(batch: int) -> WorkloadMeta:
+    return classification_graph(batch).workload_meta()
 
 
 def max_feasible_batch(gpus: int, strat_of, cap: int = 128) -> int:

@@ -27,9 +27,9 @@ import dataclasses
 
 from repro.core.auto import search
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
-                                   StrategySpec, T4_16G, V100_PAPER,
-                                   lm_workload_meta)
+                                   StrategySpec, T4_16G, V100_PAPER)
 from repro.core.hetero import plan_placement
+from repro.models.lm import model_graph
 
 
 def bert_large_cfg():
@@ -66,8 +66,7 @@ def rows(per_gpu_batch: int = 24, seq: int = 128):
     cfg = bert_large_cfg()
     out = []
     for cname, spec in CLUSTERS.items():
-        meta = lm_workload_meta(cfg, batch=per_gpu_batch * spec.n_devices,
-                                seq=seq)
+        meta = model_graph(cfg, per_gpu_batch * spec.n_devices, seq).workload_meta()
         # mechanism 1: intra-stage DP batch balancing
         dp = StrategySpec(dp=spec.n_devices, remat=False, vocab_split=False)
         naive, aware = compare(meta, dp, spec)
@@ -87,8 +86,7 @@ def auto_rows(per_gpu_batch: int = 24, seq: int = 128):
     cfg = bert_large_cfg()
     out = []
     for cname, spec in CLUSTERS.items():
-        meta = lm_workload_meta(cfg, batch=per_gpu_batch * spec.n_devices,
-                                seq=seq)
+        meta = model_graph(cfg, per_gpu_batch * spec.n_devices, seq).workload_meta()
         cands = search(meta, spec, top_k=1, overlap=0.5)
         if cands:
             out.append((cname, cands[0].strategy.describe(),

@@ -31,7 +31,8 @@ import dataclasses
 from repro.core.auto import search
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
                                    StrategySpec, V100_PAPER,
-                                   lm_workload_meta, step_cost)
+                                   step_cost)
+from repro.models.lm import model_graph
 
 
 def m6_cfg(n_experts: int = 32, d_ff_expert: int = 1024):
@@ -65,7 +66,7 @@ def rows(per_gpu_batch: int = 16, seq: int = 512):
     """
     out = []
     for cfg in (m6_cfg(n_experts=32), m6_cfg(n_experts=16)):
-        meta = lm_workload_meta(cfg, batch=per_gpu_batch * GPUS, seq=seq)
+        meta = model_graph(cfg, per_gpu_batch * GPUS, seq).workload_meta()
         for sname, strat in strategies().items():
             c = step_cost(meta, strat, V100_PAPER, overlap=0.5)
             out.append((cfg.name, sname, c.feasible, c.total, c.mem_bytes))
@@ -92,8 +93,7 @@ def auto_rows(per_gpu_batch: int = 16, seq: int = 512):
             DeviceGroup("v100", V100_PAPER, 32),
             DeviceGroup("p100", P100_16G, 32))),
     }.items():
-        meta = lm_workload_meta(cfg, batch=per_gpu_batch * spec.n_devices,
-                                seq=seq)
+        meta = model_graph(cfg, per_gpu_batch * spec.n_devices, seq).workload_meta()
         cands = search(meta, spec, top_k=4, overlap=0.5, max_pp=1)
         nested = [c for c in cands if c.strategy.ep > 1]
         out.append((cname, cands, nested))

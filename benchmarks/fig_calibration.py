@@ -43,9 +43,9 @@ import numpy as np
 from repro.core.calibrate import (Observation, fit, parameter_error,
                                   synthesize_observations)
 from repro.core.cost_model import (StrategySpec, T4_16G, V100_PAPER,
-                                   hardware_reciprocals, lm_workload_meta,
-                                   step_cost, step_cost_features)
+                                   hardware_reciprocals, step_cost, step_cost_features)
 from repro.core.hetero import price_batch_shares
+from repro.models.lm import model_graph
 from repro.runtime.elastic import HostTopology, SimHost, search_cluster
 from repro.runtime.faults import SimClock
 from repro.runtime.profiler import Profiler
@@ -89,7 +89,7 @@ def calibration_curve():
     """Part (a): fit over growing observation prefixes → error rows."""
     prior, truth = _truth_table()
     cfg = bert_large_cfg()
-    meta = lm_workload_meta(cfg, batch=192, seq=128)
+    meta = model_graph(cfg, 192, 128).workload_meta()
     strat = StrategySpec(dp=4, tp=2)
     obs = synthesize_observations(meta, strat, truth, n_steps=max(PREFIXES),
                                   noise=NOISE, seed=3)
@@ -273,8 +273,7 @@ def drift_scenario(seed: int = 0) -> dict:
     # large per-device batch → compute-dominated steps, so the stale batch
     # shares actually hurt (at small batches the share-independent in-group
     # DP all-reduce dominates and mis-splitting is almost free)
-    meta = lm_workload_meta(
-        cfg, batch=256 * sum(h.n_devices for h in topo.hosts), seq=128)
+    meta = model_graph(cfg, 256 * sum(h.n_devices for h in topo.hosts), 128).workload_meta()
     one = simulate_oneshot(meta, _topology(), seed)
     cont = simulate_continuous(meta, _topology(), seed)
     return {"oneshot": one, "continuous": cont,

@@ -36,7 +36,8 @@ from __future__ import annotations
 import dataclasses
 import statistics
 
-from repro.core.cost_model import T4_16G, V100_PAPER, lm_workload_meta
+from repro.core.cost_model import T4_16G, V100_PAPER
+from repro.models.lm import model_graph
 from repro.runtime.elastic import HostTopology, SimHost, search_cluster
 from repro.runtime.faults import FaultInjector, SimClock, SlowHost
 from repro.runtime.straggler import HostStragglerAggregator
@@ -89,8 +90,7 @@ def simulate(sc: Scenario, *, self_heal: bool, n_steps: int = N_STEPS,
     """One arm of the scenario on the simulated clock."""
     cfg = bert_large_cfg()
     topo = sc.topology
-    meta = lm_workload_meta(cfg, batch=sc.per_device_batch * topo.n_devices,
-                            seq=sc.seq)
+    meta = model_graph(cfg, sc.per_device_batch * topo.n_devices, sc.seq).workload_meta()
     injector = FaultInjector(scenarios=(sc.slow,), seed=7)
     agg = HostStragglerAggregator(n_hosts=len(topo.hosts),
                                   patience=patience, warmup=warmup)

@@ -9,6 +9,8 @@ Sections:
   fig5      100k-class DP vs DP+split hybrid             (paper Fig. 5)
   fig7      hardware-aware vs naive split on mixed GPUs  (paper §5)
   fig9      M6 recipe: nested replica{split[experts]} vs flat DP (paper §4)
+  fig10     M6 multimodal: segment-aware auto-search vs hand-even
+            pipeline split on mixed V100+T4               (paper §5.3)
   elastic   self-healing straggler eviction vs naive        (paper §5)
   serve     paged + disaggregated serving vs dense colocated (DESIGN.md §9)
   calibration  profile-calibrated cost model + drift-triggered
@@ -17,7 +19,7 @@ Sections:
   roofline  per-(arch × shape × mesh) table from the dry-run JSONL
 
 The CI regression gate over the analytic sections is benchmarks/bench_ci.py
-(writes BENCH_PR8.json, fails below the recorded floors).
+(writes BENCH_PR9.json, fails below the recorded floors).
 """
 from __future__ import annotations
 
@@ -63,6 +65,11 @@ def main() -> None:
     print("== fig9: nested DP×EP MoE — the M6 recipe (paper §4) ==")
     import benchmarks.fig9_m6_moe as fig9
     fig9.main()
+
+    print("=" * 72)
+    print("== fig10: segment-aware auto-search on M6 multimodal (§5.3) ==")
+    import benchmarks.fig10_multimodal as fig10
+    fig10.main()
 
     print("=" * 72)
     print("== elastic: self-healing eviction vs naive straggler (§5) ==")

@@ -27,7 +27,7 @@ def main():
             seq = min(args.seq, 1024)          # enc-dec: source length
         else:
             seq = args.seq
-        meta = wh.lm_workload_meta(cfg, batch=args.batch, seq=seq)
+        meta = wh.model_graph(cfg, args.batch, seq).workload_meta()
         cands = wh.search(meta, args.devices, wh.TPU_V5E, top_k=3)
         if not cands:
             print(f"{arch:24s} NO feasible strategy")

@@ -25,7 +25,7 @@ import numpy as np
 import repro as wh
 import repro.core.pipeline as pipe
 from repro.configs import get_config
-from repro.models.lm import build
+from repro.models.lm import build, model_graph
 from repro.optim import adamw
 
 MICRO = 4
@@ -82,11 +82,11 @@ def main():
 
     # --- the paper's Fig-2 headline from the cost model (64 V100s) ---
     from repro.core.cost_model import (V100_PAPER, StrategySpec,
-                                       lm_workload_meta, step_cost)
+                                       step_cost)
     bert = dataclasses.replace(get_config("stablelm-3b"), n_layers=24,
                                d_model=1024, n_heads=16, n_kv_heads=16,
                                d_ff=4096, vocab=30522, name="bert-large")
-    meta = lm_workload_meta(bert, batch=512, seq=128)
+    meta = model_graph(bert, 512, 128).workload_meta()
     hdp = step_cost(meta, StrategySpec(dp=64, zero=0, remat=False,
                                        vocab_split=False), V100_PAPER,
                     overlap=0.0)            # Horovod: no overlap with bwd

@@ -79,12 +79,17 @@ def main():
 
     # cost-model comparison at the paper's scale: DP vs DP+split on 64 GPUs
     # (the fig5 benchmark does this properly — here just the headline)
-    from repro.core.cost_model import V100_PAPER, StrategySpec, WorkloadMeta, step_cost
-    meta = WorkloadMeta(
-        name="resnet50-100k", fwd_flops=2 * 4e9 * 256, param_bytes=(90e6 + 782e6) * 4,
-        tp_shardable_param_bytes=782e6 * 4, act_bytes_per_layer=256 * 2048 * 4,
-        n_layers=50, batch=256, logits_bytes=256 * 100_000 * 4,
-        head_param_bytes=782e6 * 4)
+    from repro.core.cost_model import (V100_PAPER, ModelGraph, SegmentMeta,
+                                       StrategySpec, step_cost)
+    meta = ModelGraph(
+        name="resnet50-100k",
+        segments=(SegmentMeta(name="resnet50", n_layers=50,
+                              fwd_flops=2 * 4e9 * 256,
+                              param_bytes=90e6 * 4,
+                              act_bytes_per_layer=256 * 2048 * 4),),
+        batch=256, extra_param_bytes=782e6 * 4,
+        logits_bytes=256 * 100_000 * 4, head_param_bytes=782e6 * 4,
+        tp_shardable_fraction=782e6 / (90e6 + 782e6)).workload_meta()
     dp = step_cost(meta, StrategySpec(dp=64, vocab_split=False), V100_PAPER)
     hy = step_cost(meta, StrategySpec(dp=16, tp=4, vocab_split=True), V100_PAPER)
     print(f"[fig5 headline] 64-GPU DP: {dp.total*1e3:.0f} ms/step; "

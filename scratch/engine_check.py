@@ -74,7 +74,7 @@ print("ref loss:", float(l_ref), "pipe loss:", float(l_pipe))
 np.testing.assert_allclose(float(l_ref), float(l_pipe), rtol=2e-2)
 
 # ---- 4. auto-parallel search ----
-meta = wh.lm_workload_meta(get_config("tinyllama-1.1b"), batch=256, seq=4096)
+meta = wh.model_graph(get_config("tinyllama-1.1b"), 256, 4096).workload_meta()
 cands = wh.search(meta, 256, top_k=5)
 for c in cands:
     print(f"  {c.strategy.describe():40s} t={c.total*1e3:8.1f} ms "

@@ -59,6 +59,12 @@ fig2.print_schedule_grid(fig2.schedule_grid_rows())
 import benchmarks.fig9_m6_moe as fig9
 fig9.main()
 
+# multimodal smoke: the fig10 M6 comparison (segment-aware auto-search
+# beats the hand-even pipeline split; jamba-52B feasible only via auto)
+# with its built-in assertions
+import benchmarks.fig10_multimodal as fig10
+fig10.main()
+
 # self-healing smoke: the fig_elastic eviction loop (straggler detected,
 # evicted, rebalanced plan recovers to the cost-model prediction) with its
 # built-in assertions

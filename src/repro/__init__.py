@@ -4,3 +4,4 @@
 split / stage / pipeline / auto-parallel scopes, the engine, cost model).
 """
 from repro.core import *  # noqa: F401,F403
+from repro.models.lm import model_graph  # noqa: F401  (segment-aware meta)

@@ -8,11 +8,13 @@ The user-facing surface mirrors the paper's API (``import repro as wh``):
         with wh.split(dim=-1):
             logits = wh.sub("fc", head)(head_params, h)
 """
-from repro.core.auto import auto_parallel, meta_from_taskgraph, search  # noqa: F401
+from repro.core.auto import (auto_parallel, graph_from_taskgraph,  # noqa: F401
+                             meta_from_taskgraph, search)
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, Hardware,  # noqa: F401
-                                   P100_16G, StrategySpec, T4_16G, TPU_V5E,
-                                   V100_PAPER, WorkloadMeta, lm_workload_meta,
-                                   step_cost, throughput)
+                                   ModelGraph, P100_16G, SegmentMeta,
+                                   StrategySpec, T4_16G, TPU_V5E,
+                                   V100_PAPER, WorkloadMeta,
+                                   lm_workload_meta, step_cost, throughput)
 from repro.core.graph_opt import (GradAgg, LoweredGraph,  # noqa: F401
                                   StrategyNestingError, bridge_cost,
                                   compile_nested_plan, insert_bridges,

@@ -32,10 +32,12 @@ slowest group dominating, and discarded if any group's HBM overflows.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Iterable
 
 from repro.core.cost_model import (ClusterSpec, CostBreakdown, Hardware,
-                                   StrategySpec, TPU_V5E, WorkloadMeta,
+                                   ModelGraph, SegmentMeta, StrategySpec,
+                                   TPU_V5E, WorkloadMeta, as_workload_meta,
                                    step_cost)
 
 
@@ -55,7 +57,7 @@ class Candidate:
         return self.cost.total
 
 
-def enumerate_strategies(meta: WorkloadMeta, devices, *,
+def enumerate_strategies(meta, devices, *,
                          max_tp: int = 16, max_pp: int | None = None,
                          micro_options: Iterable | None = None,
                          schedules: Iterable | None = None,
@@ -65,6 +67,14 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
     ``devices`` may be a plain count or a :class:`ClusterSpec`; the latter
     adds the group-tiling prune (shards never straddle a hardware group).
 
+    ``meta`` may be a flat :class:`WorkloadMeta` or a segment-aware
+    :class:`ModelGraph`.  For multi-segment graphs the pipeline-depth
+    prune changes meaning: instead of ``n_layers % pp == 0`` (every layer
+    interchangeable), ``pp`` is kept when a *segment-respecting* stage
+    partition exists (stage boundaries subdivide one segment or land on
+    segment edges; atomic frontends stay whole) — uneven stage sizes are
+    the point of the multimodal search, the hetero balancer sizes them.
+
     ``schedules`` restricts the pipeline-schedule dimension (default both
     ``gpipe`` and ``1f1b`` when pp > 1).  Note the 1F1B activation pricing
     (min(M, S) in-flight) is the *schedule's* bound; the fused SPMD
@@ -72,6 +82,10 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
     under autodiff — pass ``schedules=("gpipe",)`` to search for that
     engine's HBM envelope (the executor warns on the mismatch too).
     """
+    graph = meta if isinstance(meta, ModelGraph) else None
+    if graph is not None and len(graph.segments) == 1:
+        graph = None                 # layer-homogeneous: flat rules apply
+    meta = as_workload_meta(meta)
     spec = devices if isinstance(devices, ClusterSpec) else None
     if spec is not None:
         from repro.core.hetero import strategy_fits_cluster
@@ -90,7 +104,12 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
             axis_uses.append({"tp": 1, "ep": mp})
         rest = devices // mp
         for pp in divisors(rest):
-            if pp > max_pp or meta.n_layers % pp:
+            if pp > max_pp:
+                continue
+            if graph is not None:
+                if pp > 1 and not graph.feasible_pp(pp):
+                    continue
+            elif meta.n_layers % pp:
                 continue
             dp = rest // pp
             if meta.batch % dp:
@@ -120,7 +139,7 @@ def enumerate_strategies(meta: WorkloadMeta, devices, *,
     return out
 
 
-def search(meta: WorkloadMeta, devices, hw: Hardware = TPU_V5E, *,
+def search(meta, devices, hw: Hardware = TPU_V5E, *,
            top_k: int = 5, overlap: float = 0.5, **enum_kw) -> list:
     """Rank the pruned strategy space by estimated step time.
 
@@ -128,8 +147,14 @@ def search(meta: WorkloadMeta, devices, hw: Hardware = TPU_V5E, *,
     ``devices`` may be a :class:`ClusterSpec` (mixed hardware); ``hw`` is
     then ignored and each candidate is balanced + priced per device group
     (candidates carry their :class:`HeteroPlacement`).
+
+    ``meta`` may be a segment-aware :class:`ModelGraph` — pipelined
+    candidates then cut stages at segment-respecting boundaries and price
+    each stage from its own segments' arithmetic; flat metas price exactly
+    as before (byte-identical via the single-segment flattening).
     """
     spec = devices if isinstance(devices, ClusterSpec) else None
+    flat = as_workload_meta(meta)
     cands = []
     for strat in enumerate_strategies(meta, devices, **enum_kw):
         if spec is not None:
@@ -142,14 +167,38 @@ def search(meta: WorkloadMeta, devices, hw: Hardware = TPU_V5E, *,
                 cands.append(Candidate(strategy=strat, cost=pl.cost,
                                        placement=pl))
             continue
-        c = step_cost(meta, strat, hw, overlap=overlap)
+        if isinstance(meta, ModelGraph) and len(meta.segments) > 1 \
+                and strat.pp > 1:
+            # single homogeneous hardware, multi-segment graph: the exact
+            # min-max segment-respecting partition under full pricing,
+            # slowest stage dominating
+            from repro.core.hetero import partition_min_max
+
+            def span_cost(s, lo, hi, _strat=strat):
+                return step_cost(meta.stage_meta(lo, hi, _strat.pp),
+                                 _strat, hw, overlap=overlap).total
+
+            counts = partition_min_max(meta, strat.pp, span_cost)
+            if counts is None:
+                continue
+            off, worst = 0, None
+            for ls in counts:
+                c = step_cost(meta.stage_meta(off, off + ls, strat.pp),
+                              strat, hw, overlap=overlap)
+                off += ls
+                if worst is None or c.total > worst.total:
+                    worst = c
+            if worst is not None and worst.feasible:
+                cands.append(Candidate(strategy=strat, cost=worst))
+            continue
+        c = step_cost(flat, strat, hw, overlap=overlap)
         if c.feasible:
             cands.append(Candidate(strategy=strat, cost=c))
     cands.sort(key=lambda c: c.total)
     return cands[:top_k]
 
 
-def auto_parallel(meta: WorkloadMeta, devices,
+def auto_parallel(meta, devices,
                   hw: Hardware = TPU_V5E, **kw) -> StrategySpec:
     """The one-liner of Case 5: pick the best strategy, raise if none fits."""
     best = search(meta, devices, hw, top_k=1, **kw)
@@ -160,34 +209,55 @@ def auto_parallel(meta: WorkloadMeta, devices,
         else:
             where = f"{devices}×{hw.name}"
         raise RuntimeError(
-            f"no feasible strategy for {meta.name} on {where}")
+            f"no feasible strategy for {as_workload_meta(meta).name} "
+            f"on {where}")
     return best[0].strategy
 
 
 # ---------------------------------------------------------------------------
-# TaskGraph path (the scopes API): cluster repeats, derive a WorkloadMeta
+# TaskGraph path (the scopes API): cluster repeats → segments → ModelGraph
 # ---------------------------------------------------------------------------
+
+def graph_from_taskgraph(tg, batch: int, *, name: str = "taskgraph"
+                         ) -> ModelGraph:
+    """Segment-aware workload summary from recorded Subgraph metadata.
+
+    Clustering: each repeated-substructure group from
+    :meth:`TaskGraph.cluster_repeats` becomes ONE segment — (cost of one
+    representative) × (group size), the paper's search-space pruning —
+    so a traced vision-tower → decoder nest arrives at the planner with
+    its segment boundaries intact instead of flattened away.
+    """
+    segments = []
+    for idx, g in enumerate(tg.cluster_repeats()):
+        rep = g["nodes"][0]
+        k = len(g["nodes"])
+        segments.append(SegmentMeta(
+            name=f"{rep.name}×{k}" if hasattr(rep, "name") else f"group{idx}",
+            n_layers=k,
+            fwd_flops=float(rep.flops * k),
+            param_bytes=float(rep.param_bytes * k),
+            act_bytes_per_layer=float(rep.activation_bytes)))
+    if not segments:
+        segments = [SegmentMeta(name="empty", n_layers=1, fwd_flops=0.0,
+                                param_bytes=0.0, act_bytes_per_layer=0.0)]
+    # traced graphs don't distinguish norm/bias params → the flatter 0.95
+    # shardable fraction this path has always used
+    return ModelGraph(name=name, segments=tuple(segments), batch=batch,
+                      tp_shardable_fraction=0.95)
+
 
 def meta_from_taskgraph(tg, batch: int, *, name: str = "taskgraph",
                         param_dtype_bytes: int = 4) -> WorkloadMeta:
-    """Meta-driven workload summary from recorded Subgraph metadata.
+    """DEPRECATED flat taskgraph meta — use :func:`graph_from_taskgraph`.
 
-    Clustering: repeated groups contribute (cost of one representative) ×
-    (group size) — the paper's search-space pruning.
+    Flattening the segment graph reproduces the old sums byte-for-byte
+    (running float accumulation in cluster order, 0.95 shardable
+    fraction, max activation bytes).
     """
-    groups = tg.cluster_repeats()
-    fwd_flops = 0.0
-    param_bytes = 0.0
-    act_bytes = []
-    for g in groups:
-        rep = g["nodes"][0]
-        k = len(g["nodes"])
-        fwd_flops += rep.flops * k
-        param_bytes += rep.param_bytes * k
-        act_bytes.append(rep.activation_bytes)
-    n_layers = max(len(tg.nodes), 1)
-    return WorkloadMeta(
-        name=name, fwd_flops=fwd_flops, param_bytes=param_bytes,
-        tp_shardable_param_bytes=param_bytes * 0.95,
-        act_bytes_per_layer=max(act_bytes) if act_bytes else 0.0,
-        n_layers=n_layers, batch=batch)
+    warnings.warn(
+        "meta_from_taskgraph is deprecated: use graph_from_taskgraph(tg, "
+        "batch) — it keeps segment boundaries for the planner — and "
+        "flatten with .workload_meta() if a flat WorkloadMeta is needed",
+        DeprecationWarning, stacklevel=2)
+    return graph_from_taskgraph(tg, batch, name=name).workload_meta()

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Mapping
 
 # ---------------------------------------------------------------------------
@@ -331,6 +332,265 @@ class WorkloadMeta:
     # routed-token dispatch buffer bytes per MoE layer, global batch
     # (B·S·top_k·capacity_factor·d_model·act_bytes) — the all-to-all payload
     moe_dispatch_bytes: float = 0.0
+
+
+# ---------------------------------------------------------------------------
+# segment-aware workload description (the M6 multimodal path)
+# ---------------------------------------------------------------------------
+#
+# ``WorkloadMeta`` is layer-homogeneous: one ``fwd_flops`` total, one
+# ``act_bytes_per_layer``, and every layer interchangeable.  That cannot
+# describe M6 — a vision frontend stitched to a text decoder — where a
+# pipeline cut between the modalities is the whole point (HetPipe's
+# per-segment cost problem).  A :class:`ModelGraph` is the richer
+# description: an ordered sequence of :class:`SegmentMeta` spans, each
+# internally homogeneous, with the legacy flat meta recoverable as the
+# flattened sum (``workload_meta()``) so every existing ``step_cost`` /
+# ``auto.search`` / calibration call site keeps pricing byte-identically.
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentMeta:
+    """One contiguous, internally homogeneous span of a model graph.
+
+    ``n_layers`` are interchangeable *within* the segment (the unit the
+    stage balancer moves); flops/params/activations are totals for the
+    whole segment at the graph's global batch.  ``atomic`` spans (vision
+    towers, fused frontends) may never be split across pipeline stages.
+    """
+    name: str
+    n_layers: int
+    fwd_flops: float
+    param_bytes: float
+    act_bytes_per_layer: float
+    atomic: bool = False
+    # MoE terms for segments carrying expert blocks (zero elsewhere)
+    n_experts: int = 0
+    n_moe_layers: int = 0
+    expert_param_bytes: float = 0.0
+    moe_dispatch_bytes: float = 0.0
+
+    def __post_init__(self):
+        if self.n_layers < 1:
+            raise ValueError(f"segment {self.name!r} needs >=1 layer")
+        if self.n_moe_layers > self.n_layers:
+            raise ValueError(f"segment {self.name!r}: n_moe_layers "
+                             f"{self.n_moe_layers} > n_layers {self.n_layers}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelGraph:
+    """An ordered sequence of heterogeneous segments + stack-external terms.
+
+    The stack-external terms (embeddings/head params, the lm-head matmul,
+    logits) are not owned by any segment; flattening and per-stage slicing
+    spread them evenly across layers, exactly as the legacy
+    ``scale_meta_stage`` view did.
+
+    ``workload_meta()`` flattens to the legacy :class:`WorkloadMeta`; for
+    the single-segment graphs the per-family builders in
+    :mod:`repro.models.lm` produce for dense/moe/ssm/hybrid configs, the
+    flattening is **byte-identical** to the retired ``lm_workload_meta``
+    if-ladder (regression-guarded in tests/test_model_graph.py).
+    """
+    name: str
+    segments: tuple
+    batch: int
+    extra_fwd_flops: float = 0.0      # lm-head matmul and friends
+    extra_param_bytes: float = 0.0    # embeddings / head / final norm
+    logits_bytes: float = 0.0
+    head_param_bytes: float = 0.0
+    opt_state_factor: float = 2.0
+    grad_factor: float = 1.0
+    # fraction of param bytes a tp `split` can shard (norms/bias stay
+    # replicated); the taskgraph deriver uses a different constant, which
+    # is why this is a field and not hard-coded in the flatten
+    tp_shardable_fraction: float = 0.98
+
+    def __post_init__(self):
+        if not self.segments:
+            raise ValueError("ModelGraph needs at least one segment")
+
+    # ---- structure --------------------------------------------------------
+
+    @property
+    def n_layers(self) -> int:
+        return sum(s.n_layers for s in self.segments)
+
+    def boundaries(self) -> tuple:
+        """Cumulative segment edges: (0, l₀, l₀+l₁, …, L)."""
+        out, off = [0], 0
+        for s in self.segments:
+            off += s.n_layers
+            out.append(off)
+        return tuple(out)
+
+    def segment_spans(self) -> tuple:
+        """Per-segment ``(start, stop)`` layer offsets."""
+        b = self.boundaries()
+        return tuple(zip(b[:-1], b[1:]))
+
+    def valid_span(self, lo: int, hi: int) -> bool:
+        """May layers ``[lo, hi)`` form one pipeline stage?
+
+        The segment-respecting rule: a stage boundary may fall anywhere
+        *between* layers EXCEPT inside an ``atomic`` segment (a fused
+        frontend tower is one indivisible unit — a stage either contains
+        it whole or not at all).  Non-atomic segments may be subdivided
+        freely; segment edges matter to the balancer because per-layer
+        costs change across them, not because cuts are forbidden near
+        them.
+        """
+        if not (0 <= lo < hi <= self.n_layers):
+            return False
+        for s, (s0, s1) in zip(self.segments, self.segment_spans()):
+            if not s.atomic:
+                continue
+            ov = min(hi, s1) - max(lo, s0)
+            if 0 < ov < s1 - s0:     # partial coverage of an atomic span
+                return False
+        return True
+
+    def valid_partition(self, layer_counts) -> bool:
+        """Do the per-stage layer counts cut only at valid span edges?"""
+        if sum(layer_counts) != self.n_layers:
+            return False
+        off = 0
+        for n in layer_counts:
+            if n < 1 or not self.valid_span(off, off + n):
+                return False
+            off += n
+        return True
+
+    def feasible_pp(self, pp: int) -> bool:
+        """Does ANY segment-respecting partition into ``pp`` stages exist?"""
+        if pp < 1:
+            return False
+        if pp == 1:
+            return True
+        L = self.n_layers
+        # dp over cut positions: reach[k] = set of prefixes coverable by k
+        # valid spans.  L is a few hundred at most — this is cheap.
+        reach = {0}
+        for _ in range(pp - 1):
+            reach = {m for c in reach for m in range(c + 1, L)
+                     if self.valid_span(c, m)}
+            if not reach:
+                return False
+        return any(self.valid_span(c, L) for c in reach)
+
+    def layer_costs(self) -> list:
+        """Per-layer forward FLOPs (stack-external flops spread evenly) —
+        the weights the segment-aware stage balancer allocates against."""
+        L = self.n_layers
+        extra = self.extra_fwd_flops / L
+        out = []
+        for s in self.segments:
+            out.extend([s.fwd_flops / s.n_layers + extra] * s.n_layers)
+        return out
+
+    # ---- flattening -------------------------------------------------------
+
+    def workload_meta(self) -> WorkloadMeta:
+        """Flatten to the legacy layer-homogeneous :class:`WorkloadMeta`.
+
+        Association order matches the retired if-ladder (flops summed
+        first, the head added last; shardable bytes derived from the final
+        param total) so single-segment graphs flatten byte-identically.
+        """
+        flops = 0.0
+        pbytes = 0.0
+        exp_bytes = 0.0
+        for s in self.segments:
+            flops += s.fwd_flops
+            pbytes += s.param_bytes
+            exp_bytes += s.expert_param_bytes
+        flops += self.extra_fwd_flops
+        pbytes += self.extra_param_bytes
+        n_moe = sum(s.n_moe_layers for s in self.segments)
+        return WorkloadMeta(
+            name=self.name,
+            fwd_flops=float(flops),
+            param_bytes=float(pbytes),
+            tp_shardable_param_bytes=float(pbytes
+                                           * self.tp_shardable_fraction),
+            act_bytes_per_layer=float(max(s.act_bytes_per_layer
+                                          for s in self.segments)),
+            n_layers=max(self.n_layers, 1),
+            batch=self.batch,
+            logits_bytes=float(self.logits_bytes),
+            head_param_bytes=float(self.head_param_bytes),
+            opt_state_factor=self.opt_state_factor,
+            grad_factor=self.grad_factor,
+            n_experts=max((s.n_experts for s in self.segments), default=0),
+            n_moe_layers=int(n_moe),
+            expert_param_bytes=float(exp_bytes),
+            moe_dispatch_bytes=float(max(s.moe_dispatch_bytes
+                                         for s in self.segments)))
+
+    def stage_meta(self, lo: int, hi: int, pp: int) -> WorkloadMeta:
+        """The workload as seen by ONE stage holding layers ``[lo, hi)``.
+
+        The per-segment counterpart of ``hetero.scale_meta_stage``: slice
+        totals come from the covering segments' own arithmetic instead of
+        a uniform ``layers/L`` fraction; the ``·pp`` re-scaling convention
+        (``step_cost`` divides by ``pp`` internally) and the keep-whole
+        treatment of logits/head are identical.  On a single-segment graph
+        this IS ``scale_meta_stage`` of the flattened meta.
+        """
+        if not (0 <= lo < hi <= self.n_layers):
+            raise ValueError(f"bad stage span [{lo}, {hi}) of "
+                             f"{self.n_layers} layers")
+        n = hi - lo
+        flops = pbytes = exp = 0.0
+        act = disp = 0.0
+        nmoe = 0.0
+        nexp = 0
+        for s, (s0, s1) in zip(self.segments, self.segment_spans()):
+            ov = min(hi, s1) - max(lo, s0)
+            if ov <= 0:
+                continue
+            frac = ov / s.n_layers
+            flops += s.fwd_flops * frac
+            pbytes += s.param_bytes * frac
+            act = max(act, s.act_bytes_per_layer)
+            nmoe += s.n_moe_layers * frac
+            exp += s.expert_param_bytes * frac
+            disp = max(disp, s.moe_dispatch_bytes)
+            if s.n_moe_layers:
+                nexp = max(nexp, s.n_experts)
+        scale = n / self.n_layers
+        flops += self.extra_fwd_flops * scale
+        pbytes += self.extra_param_bytes * scale
+        n_moe_stage = int(round(nmoe))
+        return WorkloadMeta(
+            name=f"{self.name}[{lo}:{hi}]",
+            fwd_flops=float(flops * pp),
+            param_bytes=float(pbytes * pp),
+            tp_shardable_param_bytes=float(pbytes * pp
+                                           * self.tp_shardable_fraction),
+            act_bytes_per_layer=float(act),
+            n_layers=n * pp,
+            batch=self.batch,
+            logits_bytes=float(self.logits_bytes),
+            head_param_bytes=float(self.head_param_bytes),
+            opt_state_factor=self.opt_state_factor,
+            grad_factor=self.grad_factor,
+            n_experts=nexp if n_moe_stage else 0,
+            n_moe_layers=n_moe_stage * pp,
+            expert_param_bytes=float(exp * pp),
+            moe_dispatch_bytes=float(disp if n_moe_stage else 0.0))
+
+    def describe(self) -> str:
+        segs = " → ".join(f"{s.name}×{s.n_layers}" for s in self.segments)
+        return f"{self.name}: {segs} ({self.n_layers} layers)"
+
+
+def as_workload_meta(workload) -> WorkloadMeta:
+    """Accept either description; flatten graphs to the legacy meta."""
+    if isinstance(workload, ModelGraph):
+        return workload.workload_meta()
+    return workload
 
 
 # ---------------------------------------------------------------------------
@@ -636,108 +896,25 @@ def throughput(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
 def lm_workload_meta(cfg, batch: int, seq: int,
                      act_dtype_bytes: int = 2,
                      param_dtype_bytes: int = 4) -> WorkloadMeta:
-    """Analytic forward FLOPs / bytes for one LMCfg (dense/moe/ssm/hybrid...).
+    """DEPRECATED flat meta derivation — use the segment-aware builders.
 
-    Matmul-dominant terms only (the same granularity the roofline uses).
+    The per-family arithmetic lives in ``repro.models.lm.model_graph``
+    (``Model.graph()``) now; this shim flattens the graph back to a
+    :class:`WorkloadMeta`.  For dense/moe/ssm/hybrid configs the result is
+    byte-identical to the retired if-ladder; vlm and encdec are priced
+    *correctly* here (frontend and cross-attention KV terms included), so
+    their metas intentionally differ from the old ones.
     """
-    E, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
-    T = batch * seq
-    hd = cfg.hd
-
-    def attn_flops() -> float:
-        H, K = cfg.n_heads, cfg.n_kv_heads
-        proj = 2 * T * E * (H * hd) + 2 * 2 * T * E * (K * hd) \
-            + 2 * T * (H * hd) * E
-        scores = 2 * T * seq * H * hd * 2 * 0.5          # causal half
-        return proj + scores
-
-    def dense_mlp_flops() -> float:
-        mult = 3 if cfg.gated_mlp else 2
-        return 2 * T * E * cfg.d_ff * mult
-
-    def moe_mlp_flops() -> float:
-        mult = 3
-        routed = 2 * T * E * cfg.d_ff_expert * mult * cfg.top_k
-        shared = 2 * T * E * cfg.d_ff_expert * mult * cfg.n_shared
-        router = 2 * T * E * cfg.n_experts
-        return routed + shared + router
-
-    def ssd_flops() -> float:
-        scfg = cfg.ssd_cfg()
-        H, P, N, C = scfg.n_heads, scfg.headdim, scfg.d_state, scfg.chunk
-        proj = 2 * T * E * (2 * H * P + 2 * N + H) + 2 * T * H * P * E
-        intra = 2 * T * C * H * (N + P)
-        inter = 2 * T * H * P * N * 2
-        return proj + intra + inter
-
-    n_attn = n_ssd = n_moe = n_dense = 0
-    if cfg.family in ("dense", "vlm"):
-        n_attn, n_dense = L, L
-    elif cfg.family == "moe":
-        n_attn = L
-        n_moe = L // cfg.moe_every
-        n_dense = L - n_moe
-    elif cfg.family == "ssm":
-        n_ssd = L
-    elif cfg.family == "hybrid":
-        n_attn = L // cfg.attn_period
-        n_ssd = L - n_attn
-        n_moe = L // 2
-        n_dense = L - n_moe
-    elif cfg.family == "encdec":
-        n_attn = cfg.n_enc_layers + 2 * cfg.n_dec_layers
-        n_dense = cfg.n_enc_layers + cfg.n_dec_layers
-        L = cfg.n_enc_layers + cfg.n_dec_layers
-    flops = (n_attn * attn_flops() + n_ssd * ssd_flops()
-             + n_moe * moe_mlp_flops() + n_dense * dense_mlp_flops())
-    head = 2 * T * E * V
-    flops += head
-
-    # params
-    def attn_params():
-        return E * (cfg.n_heads * hd) * 2 + E * (cfg.n_kv_heads * hd) * 2
-
-    def mlp_params():
-        return E * cfg.d_ff * (3 if cfg.gated_mlp else 2)
-
-    def moe_params():
-        return (cfg.n_experts + cfg.n_shared) * E * cfg.d_ff_expert * 3 \
-            + E * cfg.n_experts
-
-    def ssd_params():
-        scfg = cfg.ssd_cfg()
-        return E * scfg.d_inner * 3 + 2 * E * scfg.d_state + E * scfg.n_heads
-
-    p_count = (n_attn * attn_params() + n_ssd * ssd_params()
-               + n_moe * moe_params() + n_dense * mlp_params())
-    embed = V * E * (1 if cfg.tie_embeddings else 2)
-    param_bytes = (p_count + embed) * param_dtype_bytes
-    tp_shardable = param_bytes * 0.98   # norms/bias stay replicated
-
-    act_per_layer = T * E * act_dtype_bytes * 4   # x + 3 intermediates
-    logits_bytes = T * V * 4                       # fp32 logits if formed
-
-    # MoE metadata for the nested replica{split} expert-parallel pricing:
-    # routed expert weights (the ep-shardable bytes) and the per-layer
-    # dispatch buffer the all-to-all bridges move (top_k·capacity tokens)
-    expert_param_bytes = 0.0
-    moe_dispatch_bytes = 0.0
-    if n_moe:
-        expert_param_bytes = (n_moe * cfg.n_experts * E * cfg.d_ff_expert
-                              * 3 * param_dtype_bytes)
-        moe_dispatch_bytes = (T * cfg.top_k * cfg.capacity_factor
-                              * E * act_dtype_bytes)
-
-    return WorkloadMeta(
-        name=cfg.name, fwd_flops=float(flops), param_bytes=float(param_bytes),
-        tp_shardable_param_bytes=float(tp_shardable),
-        act_bytes_per_layer=float(act_per_layer), n_layers=max(L, 1),
-        batch=batch, logits_bytes=float(logits_bytes),
-        head_param_bytes=float(E * V * param_dtype_bytes),
-        n_experts=int(cfg.n_experts if n_moe else 0),
-        n_moe_layers=int(n_moe),
-        expert_param_bytes=float(expert_param_bytes),
-        moe_dispatch_bytes=float(moe_dispatch_bytes))
+    warnings.warn(
+        "lm_workload_meta is deprecated: build a segment-aware ModelGraph "
+        "via repro.models.lm.model_graph(cfg, batch, seq) (or "
+        "Model.graph()) and flatten with .workload_meta() if a flat "
+        "WorkloadMeta is really needed",
+        DeprecationWarning, stacklevel=2)
+    from repro.models.lm import model_graph
+    return model_graph(cfg, batch, seq,
+                       act_dtype_bytes=act_dtype_bytes,
+                       param_dtype_bytes=param_dtype_bytes).workload_meta()
 
 
 # ---------------------------------------------------------------------------

@@ -29,8 +29,9 @@ import math
 from typing import Sequence
 
 from repro.core.cost_model import (ClusterSpec, CostBreakdown, DeviceGroup,
-                                   StrategySpec, WorkloadMeta,
-                                   all_reduce_time, step_cost)
+                                   ModelGraph, StrategySpec, WorkloadMeta,
+                                   all_reduce_time, as_workload_meta,
+                                   step_cost)
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +280,99 @@ def balance_batch(meta: WorkloadMeta, strat: StrategySpec,
 # ---------------------------------------------------------------------------
 
 
-def balance_stages(meta: WorkloadMeta, strat: StrategySpec,
+def graph_stage_partition(graph: ModelGraph, pp: int,
+                          weights: Sequence[float]) -> list | None:
+    """Min-max segment-respecting partition of ``graph`` into ``pp`` stages.
+
+    Dynamic program over cut positions: stage ``s`` hosting layers
+    ``[j, i)`` costs ``Σ layer_costs[j:i] / weights[s]`` (weights are the
+    hosting groups' effective FLOP/s), spans restricted to
+    ``graph.valid_span`` (subdivide one segment XOR union whole segments;
+    atomic segments stay whole).  Returns per-stage layer counts, or
+    ``None`` when no valid partition exists — the auto-search prunes such
+    ``pp`` values.  On a single-segment graph with uniform weights this
+    reduces to the even split.
+    """
+    L = graph.n_layers
+    if pp < 1 or pp > L:
+        return None
+    lc = graph.layer_costs()
+    pre = [0.0]
+    for c in lc:
+        pre.append(pre[-1] + c)
+    return partition_min_max(
+        graph, pp, lambda s, j, i: (pre[i] - pre[j]) / weights[s])
+
+
+def partition_min_max(graph: ModelGraph, pp: int, span_cost) -> list | None:
+    """Min-max DP over valid spans with an arbitrary per-span cost.
+
+    ``span_cost(stage_idx, lo, hi) -> float`` (``inf`` = infeasible).
+    The max-over-stages objective decomposes stage by stage because each
+    span's cost depends only on its own layers and its own stage index —
+    so this is exact, not a heuristic, for whatever pricing the caller
+    plugs in.  Returns per-stage layer counts or ``None``.
+    """
+    L = graph.n_layers
+    if pp < 1 or pp > L:
+        return None
+    inf = math.inf
+    ok = graph.valid_span
+
+    # best[s][i]: minimal max stage-cost covering layers [0, i) with s stages
+    best = [[inf] * (L + 1) for _ in range(pp + 1)]
+    cut = [[-1] * (L + 1) for _ in range(pp + 1)]
+    best[0][0] = 0.0
+    for s in range(1, pp + 1):
+        for i in range(s, L - (pp - s) + 1):
+            for j in range(s - 1, i):
+                if best[s - 1][j] == inf or not ok(j, i):
+                    continue
+                c = max(best[s - 1][j], span_cost(s - 1, j, i))
+                if c < best[s][i]:
+                    best[s][i] = c
+                    cut[s][i] = j
+    if best[pp][L] == inf:
+        return None
+    counts, i = [], L
+    for s in range(pp, 0, -1):
+        j = cut[s][i]
+        counts.append(i - j)
+        i = j
+    counts.reverse()
+    return counts
+
+
+def _balance_stages_graph(graph: ModelGraph, strat: StrategySpec,
+                          spec: ClusterSpec) -> tuple:
+    """Segment-aware stage balancing under FULL four-term pricing.
+
+    The flat balancer's two-phase heuristic (flops-proportional split +
+    memory repair) is unnecessary here: per-stage cost depends only on
+    the stage's own span and hosting group, so the exact min-max
+    partition under the complete ``step_cost`` (compute + comm + bubble,
+    inf when HBM overflows) comes straight out of the span DP.  The
+    flops/weight DP objective alone would misplace cuts on clusters whose
+    binding term is the param-proportional gradient traffic, not compute.
+    """
+    sgroups = stage_groups_for(spec, strat)
+    pp = strat.pp
+
+    def span_cost(s: int, lo: int, hi: int) -> float:
+        return step_cost(graph.stage_meta(lo, hi, pp), strat,
+                         sgroups[s].hw).total        # inf when infeasible
+
+    counts = partition_min_max(graph, pp, span_cost)
+    if counts is None:
+        if not graph.feasible_pp(pp):
+            raise ValueError(
+                f"no segment-respecting partition of {graph.describe()} "
+                f"into {pp} stages")
+        raise ValueError(f"no layer allocation over {pp} stages fits HBM")
+    return sgroups, tuple(counts)
+
+
+def balance_stages(meta, strat: StrategySpec,
                    spec: ClusterSpec) -> tuple:
     """(stage→group mapping, per-stage layer counts).
 
@@ -288,7 +381,17 @@ def balance_stages(meta: WorkloadMeta, strat: StrategySpec,
     (≥1 layer per stage, summing to ``n_layers``) is then repaired
     against each stage's HBM: overweight stages shed layers one at a time
     to the feasible stage with the most compute headroom.
+
+    ``meta`` may be a segment-aware :class:`ModelGraph`: multi-segment
+    graphs route to the min-max DP allocator (stage spans respect segment
+    edges, per-layer costs come from each segment's own arithmetic);
+    single-segment graphs flatten and take the proportional path below
+    byte-identically.
     """
+    if isinstance(meta, ModelGraph):
+        if len(meta.segments) > 1:
+            return _balance_stages_graph(meta, strat, spec)
+        meta = meta.workload_meta()
     sgroups = stage_groups_for(spec, strat)
     weights = [g.device_flops for g in sgroups]
     layers = proportional_split(meta.n_layers, weights, minimum=1)
@@ -433,18 +536,79 @@ def price_batch_shares(meta: WorkloadMeta, strat: StrategySpec,
     return us, ex
 
 
-def plan_placement(meta: WorkloadMeta, strat: StrategySpec,
+def _plan_placement_graph(graph: ModelGraph, strat: StrategySpec,
+                          spec: ClusterSpec, *, overlap: float = 0.0,
+                          balanced: bool = True) -> HeteroPlacement:
+    """Pipelined placement of a multi-segment graph: each stage priced
+    from its own segments' arithmetic (modality-aware uneven stages)."""
+    if not strategy_fits_cluster(strat, spec):
+        raise ValueError(f"{strat.describe()} does not tile "
+                         f"{[g.n_devices for g in spec.groups]} devices")
+    detail: dict = {"placement": "balanced" if balanced else "naive",
+                    "graph": graph.describe()}
+    sgroups = stage_groups_for(spec, strat)
+    pp = strat.pp
+
+    def price_stages(layer_counts):
+        units, off = [], 0
+        for g, ls in zip(sgroups, layer_counts):
+            m = graph.stage_meta(off, off + ls, pp)
+            units.append(UnitPlan(
+                kind="stage", group=g, strategy=strat, meta=m,
+                batch=graph.batch, layers=ls,
+                cost=step_cost(m, strat, g.hw, overlap=overlap)))
+            off += ls
+        return units
+
+    even = tuple(proportional_split(graph.n_layers, [1.0] * pp, minimum=1))
+    layers = even
+    if balanced:
+        try:
+            sgroups, layers = _balance_stages_graph(graph, strat, spec)
+        except ValueError:
+            layers = even        # priced infeasible below, not raised
+    units = price_stages(layers)
+    if balanced and tuple(layers) != even and graph.valid_partition(even):
+        # never-worse guard vs the even split, but only when the even
+        # split is itself a legal (segment-respecting) partition
+        u2 = price_stages(even)
+        c1 = _combine(units, 0.0, detail)
+        c2 = _combine(u2, 0.0, detail)
+        if c2.feasible and (not c1.feasible or c2.total < c1.total):
+            layers, units = even, u2
+    cost = _combine(units, 0.0, detail)
+    return HeteroPlacement(spec=spec, strategy=strat, units=tuple(units),
+                           batch_shares=tuple([graph.batch]),
+                           layer_alloc=tuple(layers), cost=cost)
+
+
+def plan_placement(meta, strat: StrategySpec,
                    spec: ClusterSpec, *, overlap: float = 0.0,
                    balanced: bool = True) -> HeteroPlacement:
     """Balance ``meta`` under ``strat`` across ``spec`` and price it.
 
     ``balanced=False`` computes the *naive* placement (even batch shares /
     even layer split regardless of hardware) — the baseline that
-    benchmarks/fig7_heterogeneous.py compares against.
+    benchmarks/fig7_heterogeneous.py and fig10_multimodal.py compare
+    against.
+
+    ``meta`` may be a segment-aware :class:`ModelGraph`: unpipelined
+    strategies and single-segment graphs flatten to the legacy meta (the
+    pricing is byte-identical by construction); multi-segment graphs under
+    ``pp > 1`` price each stage from its OWN segments' arithmetic
+    (``ModelGraph.stage_meta``) and balance with the segment-respecting
+    DP allocator.
 
     On a homogeneous spec the balanced and naive placements coincide and
     the combined cost equals ``step_cost`` on the single hardware table.
     """
+    graph = meta if isinstance(meta, ModelGraph) else None
+    meta = as_workload_meta(meta)
+    if graph is not None and (len(graph.segments) == 1 or strat.pp == 1):
+        graph = None            # flat pricing is exact for these
+    if graph is not None:
+        return _plan_placement_graph(graph, strat, spec,
+                                     overlap=overlap, balanced=balanced)
     if not strategy_fits_cluster(strat, spec):
         raise ValueError(f"{strat.describe()} does not tile "
                          f"{[g.n_devices for g in spec.groups]} devices")

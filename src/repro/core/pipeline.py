@@ -30,8 +30,11 @@ Two executors, one schedule subsystem (:mod:`repro.core.schedule`):
    ``Schedule.peak_in_flight`` — the harness the schedule-equivalence
    tests drive.
 
-``make_gpipe_loss`` / ``make_gpipe_train_step`` remain as the
-even-stage GPipe aliases of the general API.
+Encoder–decoder models pipeline over their natural two-tower cut instead
+of a layer-count split: :func:`make_encdec_pipeline_loss` runs the
+(frontend +) encoder tower on stage 0 and the decoder tower + loss head
+on stage 1, shipping the ``(micro_batch, S_src, d_model)`` encoder
+memory across the wire each tick.
 """
 from __future__ import annotations
 
@@ -43,6 +46,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import schedule as sched_mod
 from repro.core.sharding import ShardingRules, use_rules
+from repro.models import encdec as encdec_mod
+from repro.models import frontends
 from repro.models import layers, transformer as tfm
 from repro.models.lm import Model, chunked_xent
 
@@ -237,7 +242,7 @@ def make_pipeline_loss(model: Model, mesh: Mesh, rules: ShardingRules, *,
                        schedule: str = "gpipe"):
     """→ (loss_fn(params, tokens), param PartitionSpecs).
 
-    The replacement for ``make_gpipe_loss``: ``params["blocks"]`` leaves
+    ``params["blocks"]`` leaves
     live in the (possibly padded) stage-sharded layout of
     :func:`pipeline_params`; embed/head/norms are stage-replicated.
     ``stage_layers`` (default even) sets each stage's repeat count —
@@ -253,7 +258,10 @@ def make_pipeline_loss(model: Model, mesh: Mesh, rules: ShardingRules, *,
     cfg = model.cfg
     stack = model.stack
     if stack is None:
-        raise ValueError("pipeline supports decoder-LM families only")
+        raise ValueError(
+            "make_pipeline_loss pipelines decoder-LM stacks; encoder–"
+            "decoder models pipeline over the two-tower cut instead — "
+            "use make_encdec_pipeline_loss / make_encdec_pipeline_train_step")
     sched_mod.make_schedule(schedule, 2, 2)   # validate the name eagerly
     if schedule != "gpipe" and micro_batches > mesh.shape["stage"]:
         import warnings
@@ -347,7 +355,7 @@ def make_pipeline_train_step(model: Model, mesh: Mesh, rules: ShardingRules,
                              donate=True):
     """Jitted (params, opt_state, tokens, step) → (params, opt_state, loss).
 
-    The replacement for ``make_gpipe_train_step`` — accepts uneven
+    Accepts uneven
     ``stage_layers`` (params/optimizer state in the padded layout of
     :func:`pipeline_params`) and a schedule choice from the plan.
     """
@@ -379,31 +387,145 @@ def make_pipeline_train_step(model: Model, mesh: Mesh, rules: ShardingRules,
                    donate_argnums=(0, 1) if donate else ())
 
 
-def _warn_gpipe_alias(name: str) -> None:
-    import warnings
-    warnings.warn(
-        f"{name} is a deprecated even-stage alias; use the "
-        f"make_pipeline_* API (uneven stage_layers + schedule choice)",
-        DeprecationWarning, stacklevel=3)
+# ---------------------------------------------------------------------------
+# encoder–decoder two-tower pipeline (the M6/seamless multimodal cut)
+# ---------------------------------------------------------------------------
 
 
-def make_gpipe_loss(model: Model, mesh: Mesh, rules: ShardingRules, *,
-                    micro_batches: int):
-    """Deprecated even-stage GPipe alias of :func:`make_pipeline_loss`
-    (the pre-schedule-subsystem API; the layer stack must divide evenly)."""
-    _warn_gpipe_alias("make_gpipe_loss")
-    return make_pipeline_loss(model, mesh, rules,
-                              micro_batches=micro_batches)
+def make_encdec_pipeline_loss(model: Model, mesh: Mesh, rules: ShardingRules,
+                              *, micro_batches: int):
+    """→ (loss_fn(params, frames, tokens), param PartitionSpecs).
+
+    Encoder–decoder models have no interchangeable layer stack to split
+    evenly — their natural pipeline cut is the segment edge between the
+    towers (exactly the boundary the segment-aware planner refuses to
+    move).  Stage 0 runs the (optional frontend adapter +) encoder on each
+    micro-batch's frames and ships the ``(mb, S_src, d_model)`` memory
+    down the wire; stage 1 embeds the target tokens, runs the decoder
+    (self-attention + cross-attention over the received memory), and takes
+    the loss.  M micro-batches drain in M + 1 ticks.
+
+    Params are stage-*replicated* (each tower's weights are only touched
+    on its own ``lax.cond`` branch; the shard_map transpose psums the
+    per-stage cotangents, so gradients are exact).  Loss aggregation
+    matches ``Model._loss_encdec``: ``Σ(nll+zl) / Σ n`` over micro-batches
+    equals the full-batch value up to float reassociation.
+    """
+    cfg = model.cfg
+    if cfg.family != "encdec" or model.ecfg is None:
+        raise ValueError(
+            f"make_encdec_pipeline_loss is the encoder–decoder engine; "
+            f"family={cfg.family!r} pipelines via make_pipeline_loss")
+    ecfg = model.ecfg
+    S = mesh.shape["stage"]
+    if S != 2:
+        raise ValueError(
+            f"the encdec pipeline is a strict 2-stage engine (encoder tower "
+            f"| decoder tower), got a stage axis of size {S}")
+    M = micro_batches
+    norm = layers.make_norm(cfg.norm)[2]
+    perm = [(0, 1)]
+
+    def inner(params, frames, tokens):
+        sid = jax.lax.axis_index("stage")
+        B, S_src, _ = frames.shape
+        T = tokens.shape[1]
+        mb = check_micro_divides(B, M)
+        frames_mb = frames.reshape(M, mb, S_src, cfg.d_model)
+        toks_mb = tokens.reshape(M, mb, T)
+        head_w = model._head_w(params).astype(cfg.adtype)
+
+        def tick(carry, t):
+            recv, loss_acc, n_acc = carry
+            fr = jax.lax.dynamic_index_in_dim(
+                frames_mb, jnp.clip(t, 0, M - 1), axis=0, keepdims=False)
+            out_mb = t - 1
+            tok = jax.lax.dynamic_index_in_dim(
+                toks_mb, jnp.clip(out_mb, 0, M - 1), axis=0, keepdims=False)
+
+            def enc_stage(op):
+                fr, _recv, _tok = op
+                x = fr.astype(cfg.adtype)
+                if cfg.frontend is not None:
+                    x = frontends.adapt(params["adapter"], x)
+                mem = encdec_mod.encode(params["encdec"], x, ecfg)
+                zero = jnp.zeros((), jnp.float32)
+                return mem.astype(cfg.adtype), zero, zero
+
+            def dec_stage(op):
+                _fr, recv, tok = op
+                dec_in = layers.embed(params["embed"],
+                                      tok[:, :-1]).astype(cfg.adtype)
+                x = encdec_mod.decode_train(params["encdec"], dec_in, recv,
+                                            ecfg)
+                xf = norm(params["final_norm"], x)
+                mask = jnp.ones((mb, T - 1), jnp.float32)
+                nll, zl, n = chunked_xent(
+                    xf, head_w, tok[:, 1:], mask, vocab=cfg.vocab,
+                    chunk=cfg.loss_chunk, z_loss_coef=cfg.z_loss_coef)
+                return recv, nll + zl, n
+
+            y, l_mb, n_mb = jax.lax.cond(sid == 0, enc_stage, dec_stage,
+                                         (fr, recv, tok))
+            w_out = (((out_mb >= 0) & (out_mb < M)) & (sid == S - 1)
+                     ).astype(jnp.float32)
+            loss_acc = loss_acc + w_out * l_mb
+            n_acc = n_acc + w_out * n_mb
+            recv_next = jax.lax.ppermute(y, "stage", perm)
+            return (recv_next, loss_acc, n_acc), None
+
+        recv0 = jnp.zeros((mb, S_src, cfg.d_model), cfg.adtype)
+        zero = jnp.zeros((), jnp.float32)
+        (_, loss_sum, n_sum), _ = jax.lax.scan(
+            tick, (recv0, zero, zero), jnp.arange(M + 1))
+        loss_sum = jax.lax.psum(loss_sum, "stage")
+        n_sum = jax.lax.psum(n_sum, "stage")
+        return loss_sum / jnp.maximum(n_sum, 1.0)
+
+    pspecs = rules.param_specs_tree(model.axes(), model.param_shapes(),
+                                    fsdp=False)
+    sm_specs = jax.tree.map(lambda names: P(), model.axes(), is_leaf=_is_axes)
+
+    def loss_fn(params, frames, tokens):
+        from repro.core.jax_compat import shard_map
+        with use_rules(rules):
+            return shard_map(
+                inner, mesh=mesh, in_specs=(sm_specs, P(), P()),
+                out_specs=P(), axis_names=frozenset({"stage"}),
+                check_vma=False,
+            )(params, frames, tokens)
+
+    return loss_fn, pspecs
 
 
-def make_gpipe_train_step(model: Model, mesh: Mesh, rules: ShardingRules,
-                          optimizer, *, micro_batches: int, donate=True):
-    """Deprecated even-stage GPipe alias of
-    :func:`make_pipeline_train_step`."""
-    _warn_gpipe_alias("make_gpipe_train_step")
-    return make_pipeline_train_step(model, mesh, rules, optimizer,
-                                    micro_batches=micro_batches,
-                                    donate=donate)
+def make_encdec_pipeline_train_step(model: Model, mesh: Mesh,
+                                    rules: ShardingRules, optimizer, *,
+                                    micro_batches: int, donate=True):
+    """Jitted (params, opt_state, frames, tokens, step) → (params,
+    opt_state, loss) through the two-tower encdec pipeline."""
+    loss_fn, pspecs = make_encdec_pipeline_loss(
+        model, mesh, rules, micro_batches=micro_batches)
+
+    def step_fn(params, opt_state, frames, tokens, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, frames, tokens)
+        params, opt_state = optimizer.apply(grads, opt_state, params, step)
+        return params, opt_state, loss
+
+    ns = lambda tree: jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                                   is_leaf=lambda t: isinstance(t, P))
+    psh = ns(pspecs)
+    ospecs = rules.param_specs_tree(
+        optimizer.state_axes(model.axes()),
+        jax.eval_shape(optimizer.init, model.param_shapes()), fsdp=False)
+    data_ax = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dspec = P(data_ax if len(data_ax) > 1 else
+              (data_ax[0] if data_ax else None))
+    batch_sh = NamedSharding(mesh, dspec)
+    rep = NamedSharding(mesh, P())
+    return jax.jit(step_fn,
+                   in_shardings=(psh, ns(ospecs), batch_sh, batch_sh, rep),
+                   out_shardings=(psh, ns(ospecs), rep),
+                   donate_argnums=(0, 1) if donate else ())
 
 
 # ---------------------------------------------------------------------------
@@ -444,7 +566,9 @@ def schedule_grads(model: Model, params: dict, tokens, *,
     cfg = model.cfg
     stack = model.stack
     if stack is None:
-        raise ValueError("pipeline supports decoder-LM families only")
+        raise ValueError(
+            "schedule_grads interprets decoder-LM stacks; encoder–decoder "
+            "models use the two-tower make_encdec_pipeline_* engine")
     M = micro_batches
     if isinstance(schedule, sched_mod.Schedule):
         sc = schedule

@@ -342,6 +342,11 @@ class ExecutionPlan:
         """
         import repro.core.pipeline as pipe
         S = self.strategy.pp
+        if self.model.stack is None:
+            # encdec: the pipeline cut is the fixed encoder|decoder tower
+            # edge, not a layer-count split (see make_encdec_pipeline_loss)
+            ecfg = self.model.ecfg
+            return (ecfg.n_enc_layers, ecfg.n_dec_layers)
         if self.placement is not None and len(
                 self.placement.layer_alloc) == S:
             return pipe.stage_layers_from_alloc(
@@ -370,6 +375,15 @@ class ExecutionPlan:
                 f"pipeline step needs pp > 1 and a 'stage' mesh axis; "
                 f"strategy is {self.strategy.describe()}, mesh axes "
                 f"{tuple(self.mesh.shape)}")
+        if self.model.stack is None:
+            # encdec routes to the two-tower engine: stage 0 = frontend +
+            # encoder, stage 1 = decoder + loss head; stage_layers/schedule
+            # do not apply (the cut is the fixed tower edge)
+            return pipe.make_encdec_pipeline_train_step(
+                self.model, self.mesh, self.rules, optimizer,
+                micro_batches=micro_batches
+                or self.strategy.micro_batches or 1,
+                donate=donate)
         return pipe.make_pipeline_train_step(
             self.model, self.mesh, self.rules, optimizer,
             micro_batches=micro_batches or self.strategy.micro_batches or 1,
@@ -381,6 +395,11 @@ class ExecutionPlan:
         """Initialise params directly into the pipeline's (possibly
         padded) stage-sharded layout."""
         import repro.core.pipeline as pipe
+        if self.model.stack is None:
+            # encdec pipeline params are stage-replicated standard layout
+            with self.mesh:
+                return jax.jit(self.model.init,
+                               out_shardings=self.param_shardings)(key)
         sl = stage_layers or self.stage_layers()
         pspecs = pipe.staged_specs(self.rules, self.param_axes,
                                    pipe._padded_model_shapes(self.model, sl))

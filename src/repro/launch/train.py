@@ -41,10 +41,10 @@ import jax.numpy as jnp
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.auto import auto_parallel
-from repro.core.cost_model import (StrategySpec, TPU_V5E, lm_workload_meta,
-                                   step_cost, step_cost_features)
+from repro.core.cost_model import (StrategySpec, TPU_V5E, step_cost,
+                                   step_cost_features)
 from repro.core.planner import compile_plan, mesh_for_strategy
-from repro.data.pipeline import DataCfg, TokenPipeline
+from repro.data.pipeline import DataCfg, MultimodalPipeline, TokenPipeline
 from repro.optim.optimizer import Schedule, adamw, adafactor
 from repro.runtime.elastic import (ElasticContext, HostTopology,
                                    plan_for_cluster)
@@ -143,7 +143,9 @@ class TrainController:
         self.ckpt = ckpt
         self.elastic = elastic
         self.topology = elastic.topology
-        self.meta = lm_workload_meta(cfg, batch=batch, seq=seq)
+        # flattened for the elastic search (max_pp=1 default: segment
+        # boundaries are irrelevant to a pure DP/TP re-plan)
+        self.meta = model.graph(batch, seq).workload_meta()
         self.save_every = save_every
         self.max_retries = max_retries
         self.injector = injector
@@ -525,12 +527,19 @@ def _parse_injections(slow: list, crash: list, drift: list = ()) -> tuple:
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_NAMES, default="tinyllama-1.1b")
+    ap.add_argument("--arch", "--model", dest="arch", choices=ARCH_NAMES,
+                    default="tinyllama-1.1b",
+                    help="architecture to train (--model is an alias; "
+                         "includes the M6 multimodal workloads, e.g. "
+                         "qwen2-vl-2b / seamless-m4t-medium)")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced same-family config (CPU-sized)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--src-seq", type=int, default=None,
+                    help="encoder-side source length for encdec archs "
+                         "(frames per sample); default: --seq")
     ap.add_argument("--mesh", default="", help="e.g. 4x2 = data4 × model2")
     ap.add_argument("--micro-batches", type=int, default=None,
                     help="default: the plan's choice (1 when unplanned)")
@@ -640,8 +649,18 @@ def main(argv=None) -> dict:
                      decay_steps=args.steps)
     opt = (adamw(lr=sched) if args.optimizer == "adamw"
            else adafactor(lr=sched))
-    data = TokenPipeline(DataCfg(global_batch=args.batch, seq_len=args.seq,
-                                 vocab=cfg.vocab, seed=args.seed))
+    dcfg = DataCfg(global_batch=args.batch, seq_len=args.seq,
+                   vocab=cfg.vocab, seed=args.seed)
+    src_seq = args.src_seq or args.seq
+    if cfg.family in ("vlm", "encdec"):
+        # multimodal archs consume a modality stream alongside the tokens:
+        # patch embeddings for vlm, source frames for encdec
+        data = MultimodalPipeline(
+            dcfg, modality=cfg.family, d_model=cfg.d_model,
+            frontend_len=cfg.frontend_len if cfg.family == "vlm" else 0,
+            src_len=src_seq if cfg.family == "encdec" else 0)
+    else:
+        data = TokenPipeline(dcfg)
     ckpt = CheckpointManager(args.ckpt_dir, keep=2)
 
     # ---- self-healing controller path (simulated multi-host) ----
@@ -690,12 +709,25 @@ def main(argv=None) -> dict:
                 "events": out["events"], "phase": out["phase"]}
 
     # ---- mesh & strategy ----
+    # the cost model can PRICE a pipelined vlm (the planner/fig10 use it),
+    # but the executable layer-stack engine is token-only — it has no slot
+    # for the vision frontend or the M-RoPE position tensor, so this
+    # driver never routes vlm to pp > 1
     if args.auto:
-        meta = lm_workload_meta(cfg, batch=args.batch, seq=args.seq)
-        strat = auto_parallel(meta, len(jax.devices()), TPU_V5E)
+        # the segment-aware graph lets the search respect frontend/encoder/
+        # decoder boundaries when it enumerates pipeline splits
+        graph = model.graph(args.batch, args.seq, src_seq=src_seq)
+        search_kw = {"max_pp": 1} if cfg.family == "vlm" else {}
+        strat = auto_parallel(graph, len(jax.devices()), TPU_V5E,
+                              **search_kw)
         print(f"[auto] chose: {strat.describe()}")
         mesh = mesh_for_strategy(strat)
     elif args.pp > 1:
+        if cfg.family == "vlm":
+            raise SystemExit(
+                "--pp does not apply to vlm archs yet: the executable "
+                "pipeline engine cannot stage the vision frontend "
+                "(train non-pipelined, e.g. --dp, instead)")
         n = len(jax.devices())
         if n < args.pp or n % args.pp:
             raise SystemExit(
@@ -722,6 +754,10 @@ def main(argv=None) -> dict:
         import repro.core.pipeline as pipe
         stage_layers = None
         if args.stage_layers:
+            if model.stack is None:
+                raise SystemExit("--stage-layers does not apply to encdec "
+                                 "archs: the pipeline cut is the fixed "
+                                 "encoder|decoder tower edge")
             stage_layers = tuple(int(x) for x in args.stage_layers.split(","))
             pipe.check_stage_layers(stage_layers, model.stack.n_rep,
                                     plan.strategy.pp)
@@ -785,7 +821,8 @@ def main(argv=None) -> dict:
         from repro.core import cost_model as _cm
         prof_hw = {"tpu_v5e": _cm.TPU_V5E, "v100": _cm.V100_PAPER,
                    "p100": _cm.P100_16G, "t4": _cm.T4_16G}[args.hw]
-        prof_meta = lm_workload_meta(cfg, batch=args.batch, seq=args.seq)
+        prof_meta = model.graph(args.batch, args.seq,
+                                src_seq=src_seq).workload_meta()
         prof_feats = step_cost_features(prof_meta, plan.strategy, prof_hw)
         profiler = Profiler()
     losses = []
@@ -797,7 +834,14 @@ def main(argv=None) -> dict:
     def one_step(i, st):
         batch = batch_for(i)
         with mesh:
-            if pipelined:
+            if pipelined and "frames" in batch:
+                # encdec two-tower pipeline: encoder memory ships over the
+                # stage wire, so the step consumes frames AND tokens
+                p, o, loss = step_fn(st["params"], st["opt"],
+                                     batch["frames"], batch["tokens"],
+                                     jnp.asarray(i))
+                new, m = {"params": p, "opt": o}, {"loss": loss}
+            elif pipelined:
                 p, o, loss = step_fn(st["params"], st["opt"],
                                      batch["tokens"], jnp.asarray(i))
                 new, m = {"params": p, "opt": o}, {"loss": loss}

@@ -19,6 +19,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.cost_model import ModelGraph, SegmentMeta
 from repro.core.sharding import constrain
 from repro.models import encdec as encdec_mod
 from repro.models import frontends, layers
@@ -318,6 +319,19 @@ class Model:
     def param_shapes(self) -> dict:
         return jax.eval_shape(lambda: self.init(jax.random.key(0)))
 
+    def graph(self, batch: int, seq: int, *, act_dtype_bytes: int = 2,
+              param_dtype_bytes: int = 4,
+              src_seq: int | None = None) -> "ModelGraph":
+        """Segment-aware cost-model view of this model (see
+        :func:`model_graph`): ordered SegmentMeta segments — frontends,
+        encoder/decoder stacks, MoE block groups — each with its own
+        flops/param/activation arithmetic, flattenable to a legacy
+        WorkloadMeta via ``.workload_meta()``."""
+        return model_graph(self.cfg, batch, seq,
+                           act_dtype_bytes=act_dtype_bytes,
+                           param_dtype_bytes=param_dtype_bytes,
+                           src_seq=src_seq)
+
     # ---- shared pieces ----
     def _head_w(self, params) -> jax.Array:
         if self.cfg.tie_embeddings:
@@ -571,3 +585,177 @@ def build(cfg: LMCfg) -> Model:
 
 def param_count(params) -> int:
     return sum(int(math.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# per-family ModelGraph builders (meta-driven: pure arithmetic on the config)
+# ---------------------------------------------------------------------------
+#
+# The segment-aware successor of core.cost_model's retired family
+# if-ladder.  Matmul-dominant terms only (the granularity the roofline
+# uses).  For the layer-homogeneous families (dense/moe/ssm/hybrid) the
+# single "stack" segment computes the EXACT legacy expressions, so
+# ``model_graph(cfg, b, s).workload_meta()`` is byte-identical to the old
+# ``lm_workload_meta`` — tests/test_model_graph.py freezes that formula
+# and guards the identity across every shipped config.
+#
+# The multimodal families get real graphs (and real pricing fixes):
+#
+# - ``vlm``: an atomic vision-frontend segment prices the patch adapter
+#   (flops over the ``frontend_len`` prefix tokens + the d_model² adapter
+#   params) that the legacy ladder silently dropped — vlm ≠ dense now.
+# - ``encdec``: encoder and decoder become separate segments; encoder
+#   self-attention scores are non-causal (no ×0.5), and decoder
+#   cross-attention prices its KV projections over the SOURCE tokens plus
+#   full (non-causal) q·k scores against the source memory — the
+#   cross-attention KV term the flat meta never carried.
+
+
+def model_graph(cfg: LMCfg, batch: int, seq: int,
+                act_dtype_bytes: int = 2, param_dtype_bytes: int = 4,
+                src_seq: int | None = None) -> ModelGraph:
+    """Segment-aware workload description for one LMCfg.
+
+    ``src_seq`` (encdec only): source-side sequence length fed to the
+    encoder; defaults to ``seq`` (the target length).
+    """
+    E, V, L = cfg.d_model, cfg.padded_vocab, cfg.n_layers
+    T = batch * seq
+    hd = cfg.hd
+    pdb = param_dtype_bytes
+
+    def attn_flops(t=T, kv=seq, causal=True) -> float:
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        proj = 2 * t * E * (H * hd) + 2 * 2 * t * E * (K * hd) \
+            + 2 * t * (H * hd) * E
+        scores = 2 * t * kv * H * hd * 2 * (0.5 if causal else 1.0)
+        return proj + scores
+
+    def cross_attn_flops(t_q, t_kv, kv_len) -> float:
+        # q/o projections ride the query tokens; k/v projections ride the
+        # SOURCE tokens (computed once per layer); scores are full rank —
+        # nothing causal about attending to an encoded source
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        proj = 2 * t_q * E * (H * hd) + 2 * 2 * t_kv * E * (K * hd) \
+            + 2 * t_q * (H * hd) * E
+        scores = 2 * t_q * kv_len * H * hd * 2
+        return proj + scores
+
+    def dense_mlp_flops(t=T) -> float:
+        mult = 3 if cfg.gated_mlp else 2
+        return 2 * t * E * cfg.d_ff * mult
+
+    def moe_mlp_flops() -> float:
+        mult = 3
+        routed = 2 * T * E * cfg.d_ff_expert * mult * cfg.top_k
+        shared = 2 * T * E * cfg.d_ff_expert * mult * cfg.n_shared
+        router = 2 * T * E * cfg.n_experts
+        return routed + shared + router
+
+    def ssd_flops() -> float:
+        scfg = cfg.ssd_cfg()
+        H, P, N, C = scfg.n_heads, scfg.headdim, scfg.d_state, scfg.chunk
+        proj = 2 * T * E * (2 * H * P + 2 * N + H) + 2 * T * H * P * E
+        intra = 2 * T * C * H * (N + P)
+        inter = 2 * T * H * P * N * 2
+        return proj + intra + inter
+
+    def attn_params():
+        return E * (cfg.n_heads * hd) * 2 + E * (cfg.n_kv_heads * hd) * 2
+
+    def mlp_params():
+        return E * cfg.d_ff * (3 if cfg.gated_mlp else 2)
+
+    def moe_params():
+        return (cfg.n_experts + cfg.n_shared) * E * cfg.d_ff_expert * 3 \
+            + E * cfg.n_experts
+
+    def ssd_params():
+        scfg = cfg.ssd_cfg()
+        return E * scfg.d_inner * 3 + 2 * E * scfg.d_state + E * scfg.n_heads
+
+    def adapter_segment(name: str, prefix_tokens: int) -> SegmentMeta:
+        # frontends.init_adapter: one d_model×d_model projection + bias
+        return SegmentMeta(
+            name=name, n_layers=1, atomic=True,
+            fwd_flops=float(2 * prefix_tokens * E * E),
+            param_bytes=float((E * E + E) * pdb),
+            act_bytes_per_layer=float(prefix_tokens * E
+                                      * act_dtype_bytes * 4))
+
+    act_per_layer = T * E * act_dtype_bytes * 4   # x + 3 intermediates
+
+    def stack_segment(name: str, n_attn: int, n_ssd: int, n_moe: int,
+                      n_dense: int, n_layers: int) -> SegmentMeta:
+        flops = (n_attn * attn_flops() + n_ssd * ssd_flops()
+                 + n_moe * moe_mlp_flops() + n_dense * dense_mlp_flops())
+        p_count = (n_attn * attn_params() + n_ssd * ssd_params()
+                   + n_moe * moe_params() + n_dense * mlp_params())
+        expert_param_bytes = 0.0
+        moe_dispatch_bytes = 0.0
+        if n_moe:
+            expert_param_bytes = (n_moe * cfg.n_experts * E * cfg.d_ff_expert
+                                  * 3 * pdb)
+            moe_dispatch_bytes = (T * cfg.top_k * cfg.capacity_factor
+                                  * E * act_dtype_bytes)
+        return SegmentMeta(
+            name=name, n_layers=n_layers,
+            fwd_flops=float(flops), param_bytes=float(p_count * pdb),
+            act_bytes_per_layer=float(act_per_layer),
+            n_experts=int(cfg.n_experts if n_moe else 0),
+            n_moe_layers=int(n_moe),
+            expert_param_bytes=float(expert_param_bytes),
+            moe_dispatch_bytes=float(moe_dispatch_bytes))
+
+    if cfg.family == "dense":
+        segments = (stack_segment("stack", L, 0, 0, L, max(L, 1)),)
+    elif cfg.family == "moe":
+        n_moe = L // cfg.moe_every
+        segments = (stack_segment("stack", L, 0, n_moe, L - n_moe,
+                                  max(L, 1)),)
+    elif cfg.family == "ssm":
+        segments = (stack_segment("stack", 0, L, 0, 0, max(L, 1)),)
+    elif cfg.family == "hybrid":
+        n_attn = L // cfg.attn_period
+        n_moe = L // 2
+        segments = (stack_segment("stack", n_attn, L - n_attn, n_moe,
+                                  L - n_moe, max(L, 1)),)
+    elif cfg.family == "vlm":
+        segments = (adapter_segment("vision-frontend",
+                                    batch * cfg.frontend_len),
+                    stack_segment("decoder", L, 0, 0, L, max(L, 1)))
+    elif cfg.family == "encdec":
+        s_src = seq if src_seq is None else src_seq
+        t_src = batch * s_src
+        n_enc, n_dec = cfg.n_enc_layers, cfg.n_dec_layers
+        enc_flops = n_enc * (attn_flops(t_src, s_src, causal=False)
+                             + dense_mlp_flops(t_src))
+        dec_flops = n_dec * (attn_flops(T, seq, causal=True)
+                             + cross_attn_flops(T, t_src, s_src)
+                             + dense_mlp_flops(T))
+        enc_params = n_enc * (attn_params() + mlp_params())
+        dec_params = n_dec * (2 * attn_params() + mlp_params())
+        enc_act = t_src * E * act_dtype_bytes * 4
+        enc = SegmentMeta(name="encoder", n_layers=max(n_enc, 1),
+                          fwd_flops=float(enc_flops),
+                          param_bytes=float(enc_params * pdb),
+                          act_bytes_per_layer=float(enc_act))
+        dec = SegmentMeta(name="decoder", n_layers=max(n_dec, 1),
+                          fwd_flops=float(dec_flops),
+                          param_bytes=float(dec_params * pdb),
+                          act_bytes_per_layer=float(act_per_layer))
+        segments = (enc, dec)
+        if cfg.frontend:
+            segments = (adapter_segment(f"{cfg.frontend}-frontend", t_src),
+                        ) + segments
+    else:
+        raise ValueError(f"unknown model family {cfg.family!r}")
+
+    head = 2 * T * E * V
+    embed = V * E * (1 if cfg.tie_embeddings else 2)
+    return ModelGraph(
+        name=cfg.name, segments=segments, batch=batch,
+        extra_fwd_flops=float(head),
+        extra_param_bytes=float(embed * pdb),
+        logits_bytes=float(T * V * 4),
+        head_param_bytes=float(E * V * pdb))

@@ -31,10 +31,10 @@ from repro.core.calibrate import (CalibratedHardware, Observation, fit,
 from repro.core.cost_model import (CALIBRATION_PARAMS, ClusterSpec,
                                    DeviceGroup, Hardware, StrategySpec,
                                    T4_16G, TPU_V5E, V100_PAPER,
-                                   hardware_reciprocals, lm_workload_meta,
-                                   predict_step_time, step_cost,
+                                   hardware_reciprocals, predict_step_time, step_cost,
                                    step_cost_features)
 from repro.core.hetero import plan_placement, price_batch_shares
+from repro.models.lm import model_graph
 from repro.runtime.faults import DriftHost, FaultInjector
 from repro.runtime.profiler import Profiler, ring_effective_bytes
 
@@ -54,7 +54,7 @@ def run_py(code: str, devices: int = 4, timeout: int = 540):
 
 def _meta(batch=256, seq=512, arch="tinyllama-1.1b"):
     from repro.configs import get_config
-    return lm_workload_meta(get_config(arch), batch=batch, seq=seq)
+    return model_graph(get_config(arch), batch, seq).workload_meta()
 
 
 # ---------------------------------------------------------------------------
@@ -91,8 +91,7 @@ def test_features_reproduce_step_cost(hw, strat, overlap):
 
 def test_features_reproduce_step_cost_moe():
     from repro.configs import get_config
-    meta = lm_workload_meta(get_config("deepseek-moe-16b"), batch=64,
-                            seq=512)
+    meta = model_graph(get_config("deepseek-moe-16b"), 64, 512).workload_meta()
     for strat in (StrategySpec(dp=8, ep=4), StrategySpec(dp=4, tp=2, ep=2),
                   StrategySpec(dp=8, ep=8, zero=3)):
         cb = step_cost(meta, strat, V100_PAPER, overlap=0.5)

@@ -9,10 +9,10 @@ import repro as wh
 from repro.core.auto import enumerate_strategies, search
 from repro.core.cost_model import (StrategySpec, TPU_V5E, V100_PAPER,
                                    WorkloadMeta, all_gather_time,
-                                   all_reduce_time, lm_workload_meta,
-                                   step_cost)
+                                   all_reduce_time, step_cost)
 from repro.core.ir import TaskGraph, TensorMeta, capture_meta, jaxpr_flops
 from repro.core.sharding import hybrid_rules
+from repro.models.lm import model_graph
 
 
 # ---------------------------------------------------------------------------
@@ -185,18 +185,14 @@ def test_collective_formulas():
 
 
 def test_step_cost_memory_decreases_with_zero():
-    meta = lm_workload_meta(
-        __import__("repro.configs", fromlist=["get_config"])
-        .get_config("tinyllama-1.1b"), batch=256, seq=2048)
+    meta = model_graph(__import__("repro.configs", fromlist=["get_config"]) .get_config("tinyllama-1.1b"), 256, 2048).workload_meta()
     c0 = step_cost(meta, StrategySpec(dp=64, zero=0), TPU_V5E)
     c3 = step_cost(meta, StrategySpec(dp=64, zero=3), TPU_V5E)
     assert c3.mem_bytes < c0.mem_bytes
 
 
 def test_step_cost_pipeline_bubble():
-    meta = lm_workload_meta(
-        __import__("repro.configs", fromlist=["get_config"])
-        .get_config("tinyllama-1.1b"), batch=64, seq=512)
+    meta = model_graph(__import__("repro.configs", fromlist=["get_config"]) .get_config("tinyllama-1.1b"), 64, 512).workload_meta()
     c1 = step_cost(meta, StrategySpec(dp=8, pp=2, micro_batches=1), TPU_V5E)
     c8 = step_cost(meta, StrategySpec(dp=8, pp=2, micro_batches=8), TPU_V5E)
     assert c8.bubble < c1.bubble
@@ -224,7 +220,7 @@ def test_vocab_split_beats_gathered_head_on_paper_hw():
 @given(devices=st.sampled_from([8, 16, 64, 256]))
 def test_enumeration_is_pruned_and_legal(devices):
     from repro.configs import get_config
-    meta = lm_workload_meta(get_config("tinyllama-1.1b"), batch=256, seq=512)
+    meta = model_graph(get_config("tinyllama-1.1b"), 256, 512).workload_meta()
     for s in enumerate_strategies(meta, devices):
         assert s.dp * s.tp * s.pp == devices
         assert meta.n_layers % s.pp == 0
@@ -233,7 +229,7 @@ def test_enumeration_is_pruned_and_legal(devices):
 
 def test_search_returns_sorted_feasible():
     from repro.configs import get_config
-    meta = lm_workload_meta(get_config("qwen3-1.7b"), batch=256, seq=4096)
+    meta = model_graph(get_config("qwen3-1.7b"), 256, 4096).workload_meta()
     cands = search(meta, 256, TPU_V5E, top_k=8)
     assert cands, "no feasible strategy found"
     totals = [c.total for c in cands]
@@ -243,7 +239,7 @@ def test_search_returns_sorted_feasible():
 
 def test_auto_parallel_prefers_fitting_strategy_for_giant_model():
     from repro.configs import get_config
-    meta = lm_workload_meta(get_config("grok-1-314b"), batch=256, seq=4096)
+    meta = model_graph(get_config("grok-1-314b"), 256, 4096).workload_meta()
     strat = wh.auto_parallel(meta, 256, TPU_V5E)
     # 314B params cannot be pure DP on 16 GB chips
     assert strat.tp > 1 or strat.pp > 1 or strat.zero >= 3

@@ -132,15 +132,15 @@ def test_uneven_hetero_plan_pipeline_matches_reference():
         from repro.configs import get_config
         from repro.core.cost_model import (ClusterSpec, DeviceGroup,
                                            P100_16G, StrategySpec,
-                                           V100_PAPER, lm_workload_meta)
+                                           V100_PAPER)
         from repro.core.planner import compile_plan, mesh_for_strategy
-        from repro.models.lm import build
+        from repro.models.lm import build, model_graph
         from repro.optim import adamw
         import repro.core.pipeline as pipe
         cfg = dataclasses.replace(get_config("tinyllama-1.1b", smoke=True),
                                   n_layers=8)
         model = build(cfg)
-        meta = lm_workload_meta(cfg, batch=64, seq=512)   # planning scale
+        meta = model_graph(cfg, 64, 512).workload_meta()   # planning scale
         spec = ClusterSpec(groups=(DeviceGroup("v100", V100_PAPER, 4),
                                    DeviceGroup("p100", P100_16G, 4)))
         strat = StrategySpec(dp=2, pp=4, micro_batches=4, schedule="1f1b")
@@ -313,3 +313,146 @@ def test_production_dryrun_one_cell():
         print("OK", rec["bottleneck"], round(rec["roofline_frac"], 4))
     """, devices=8)   # XLA_FLAGS overridden inside dryrun to 512
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# encoder–decoder two-tower pipeline (PR 9: the M6 multimodal cut)
+# ---------------------------------------------------------------------------
+
+def test_encdec_pipeline_loss_matches_reference():
+    """Two-tower pipeline (stage 0 = frontend+encoder, stage 1 = decoder)
+    loss == the non-pipelined encdec loss.  Forward-only, so it runs on
+    every supported jax (the grad path is gated below)."""
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        import repro as wh
+        import repro.core.pipeline as pipe
+        from repro.configs import get_config
+        from repro.models.lm import build
+        cfg = get_config("seamless-m4t-medium", smoke=True)
+        model = build(cfg)
+        mesh = jax.make_mesh((2, 1, 1), ("stage", "data", "model"))
+        rules = wh.hybrid_rules(mesh)
+        lfn, pspecs = pipe.make_encdec_pipeline_loss(model, mesh, rules,
+                                                     micro_batches=2)
+        rng = np.random.default_rng(0)
+        frames = jnp.asarray(rng.normal(size=(4, 8, cfg.d_model)),
+                             jnp.float32)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+        params = model.init(jax.random.key(0))
+        with mesh:
+            l_pipe = jax.jit(lfn)(params, frames, tokens)
+        l_ref, _ = jax.jit(model.loss_fn)(
+            params, {"frames": frames, "tokens": tokens})
+        np.testing.assert_allclose(float(l_pipe), float(l_ref), rtol=2e-4)
+        print("OK", float(l_pipe), float(l_ref))
+    """, devices=2)
+
+
+def test_encdec_pipeline_rejects_wrong_stage_count():
+    run_py("""
+        import jax
+        import repro as wh
+        import repro.core.pipeline as pipe
+        from repro.configs import get_config
+        from repro.models.lm import build
+        model = build(get_config("seamless-m4t-medium", smoke=True))
+        mesh = jax.make_mesh((4, 1, 1), ("stage", "data", "model"))
+        try:
+            pipe.make_encdec_pipeline_loss(model, mesh,
+                                           wh.hybrid_rules(mesh),
+                                           micro_batches=2)
+        except ValueError as e:
+            assert "2-stage" in str(e)
+            print("OK")
+        else:
+            raise SystemExit("4-stage encdec should have been rejected")
+    """, devices=4)
+
+
+def test_encdec_plan_routes_to_two_tower_engine():
+    """compile_plan on an encdec arch: stage_layers() reports the fixed
+    tower edge and jit_pipeline_train_step dispatches to the encdec
+    engine (no layer-stack splitting)."""
+    run_py("""
+        import jax
+        from repro.configs import get_config
+        from repro.core.cost_model import StrategySpec
+        from repro.core.planner import compile_plan, mesh_for_strategy
+        from repro.models.lm import build
+        cfg = get_config("seamless-m4t-medium", smoke=True)
+        model = build(cfg)
+        assert model.stack is None     # encdec has no repeated layer stack
+        strat = StrategySpec(dp=1, pp=2, micro_batches=2)
+        mesh = mesh_for_strategy(strat)
+        plan = compile_plan(model, mesh, strategy=strat)
+        assert plan.stage_layers() == (cfg.n_enc_layers, cfg.n_dec_layers), \
+            plan.stage_layers()
+        print("OK", plan.stage_layers())
+    """, devices=2)
+
+
+@requires_partial_auto_shard_map
+def test_encdec_pipeline_training_reduces_loss():
+    run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.core.cost_model import StrategySpec
+        from repro.core.planner import compile_plan, mesh_for_strategy
+        from repro.models.lm import build
+        from repro.optim import adamw
+        cfg = get_config("seamless-m4t-medium", smoke=True)
+        model = build(cfg)
+        strat = StrategySpec(dp=1, pp=2, micro_batches=2)
+        mesh = mesh_for_strategy(strat)
+        plan = compile_plan(model, mesh, strategy=strat)
+        opt = adamw(lr=1e-3)
+        step = plan.jit_pipeline_train_step(opt, donate=False)
+        params = plan.init_pipeline_params(jax.random.key(0))
+        rng = np.random.default_rng(0)
+        frames = jnp.asarray(rng.normal(size=(4, 8, cfg.d_model)),
+                             jnp.float32)
+        tokens = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
+        with mesh:
+            ost = jax.jit(opt.init)(params)
+            losses = []
+            for i in range(4):
+                params, ost, loss = step(params, ost, frames, tokens,
+                                         jnp.asarray(i))
+                losses.append(float(loss))
+        assert losses[-1] < losses[0], losses
+        print("OK", losses)
+    """, devices=2)
+
+
+def test_multimodal_pipeline_determinism_and_reshard():
+    """MultimodalPipeline: modality stream is deterministic, resumable,
+    and host-count invariant (the token-pipeline guarantees extend to
+    frames/patch_embeds)."""
+    import numpy as np
+    from repro.data.pipeline import DataCfg, MultimodalPipeline
+    cfg = DataCfg(global_batch=8, seq_len=16, vocab=512, seed=3)
+    p1 = MultimodalPipeline(cfg, modality="encdec", d_model=32, src_len=8,
+                            host_id=0, n_hosts=1)
+    batches = [p1.next_batch() for _ in range(4)]
+    assert batches[0]["frames"].shape == (8, 8, 32)
+    # determinism: a fresh pipeline replays the same stream
+    p2 = MultimodalPipeline(cfg, modality="encdec", d_model=32, src_len=8,
+                            host_id=0, n_hosts=1)
+    for b in batches:
+        b2 = p2.next_batch()
+        np.testing.assert_array_equal(b["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b["frames"], b2["frames"])
+    # reshard: 2-host shards concatenate to the 1-host batch
+    h0 = p1.reshard(host_id=0, n_hosts=2)
+    h1 = p1.reshard(host_id=1, n_hosts=2)
+    full = p1.next_batch()
+    a, b = h0.next_batch(), h1.next_batch()
+    np.testing.assert_array_equal(
+        np.concatenate([a["frames"], b["frames"]]), full["frames"])
+    np.testing.assert_array_equal(
+        np.concatenate([a["tokens"], b["tokens"]]), full["tokens"])
+    # vlm modality emits patch_embeds of the frontend length
+    pv = MultimodalPipeline(cfg, modality="vlm", d_model=32, frontend_len=4,
+                            host_id=0, n_hosts=1)
+    assert pv.next_batch()["patch_embeds"].shape == (8, 4, 32)

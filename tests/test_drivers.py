@@ -78,3 +78,39 @@ def test_train_driver_self_healing_cli(tmp_path):
     assert "[evict] hosts [1]" in out
     assert "[rebalance] resumed" in out
     assert "phase DONE, 1 eviction(s)" in out
+
+
+@pytest.mark.slow
+def test_train_driver_multimodal_vlm(tmp_path):
+    """--model alias + the vlm path: MultimodalPipeline feeds patch_embeds
+    through the standard (non-pipelined) engine."""
+    out = run_cli(["repro.launch.train", "--model", "qwen2-vl-2b",
+                   "--smoke", "--steps", "3", "--batch", "2", "--seq", "64",
+                   "--log-every", "1", "--ckpt-dir", str(tmp_path)])
+    assert "[done] step 3" in out
+
+
+def test_train_driver_vlm_rejects_pp(tmp_path):
+    """The executable pipeline engine cannot stage the vision frontend:
+    --pp on a vlm arch must fail loudly, and --auto must never route
+    there (regression: auto used to pick pp=2 and crash in M-RoPE)."""
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=2",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--model",
+         "qwen2-vl-2b", "--smoke", "--pp", "2", "--steps", "1",
+         "--batch", "2", "--seq", "32", "--ckpt-dir", str(tmp_path)],
+        capture_output=True, text=True, timeout=300, env=env, cwd=ROOT)
+    assert p.returncode != 0
+    assert "does not apply to vlm" in p.stderr
+
+
+@pytest.mark.slow
+def test_train_driver_auto_vlm_stays_unpipelined(tmp_path):
+    out = run_cli(["repro.launch.train", "--model", "qwen2-vl-2b",
+                   "--smoke", "--auto", "--steps", "2", "--batch", "4",
+                   "--seq", "32", "--ckpt-dir", str(tmp_path)])
+    assert "[auto] chose:" in out
+    assert "pipeline" not in out.split("[auto] chose:")[1].splitlines()[0]
+    assert "[done] step 2" in out

@@ -9,11 +9,12 @@ import pytest
 import repro as wh
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
                                    StrategySpec, V100_PAPER,
-                                   lm_workload_meta, step_cost)
+                                   step_cost)
 from repro.core.graph_opt import (StrategyNestingError, bridge_cost,
                                   insert_bridges, place_grad_aggregation,
                                   plan_bridge, validate_nesting)
 from repro.core.ir import StrategyAnnotation, Subgraph, TaskGraph, TensorMeta
+from repro.models.lm import model_graph
 
 
 def _net(p, x):
@@ -242,7 +243,7 @@ def _moe_meta(n_experts=16, batch=1024):
         n_heads=16, n_kv_heads=16, head_dim=64, d_ff=4096,
         n_experts=n_experts, top_k=2, d_ff_expert=1024, n_shared=0,
         moe_every=2, vocab=30522, name="moe-test")
-    return lm_workload_meta(cfg, batch=batch, seq=512)
+    return model_graph(cfg, batch, 512).workload_meta()
 
 
 def test_ep1_pricing_identical_to_flat():
@@ -301,8 +302,7 @@ def test_nested_ep_pays_all_to_all():
     assert c.detail["ep_all_to_all"] > 0
     # dense model: no moe terms, ep pricing inert
     from repro.configs import get_config
-    dense = lm_workload_meta(get_config("tinyllama-1.1b"), batch=1024,
-                             seq=512)
+    dense = model_graph(get_config("tinyllama-1.1b"), 1024, 512).workload_meta()
     assert dense.n_moe_layers == 0 and dense.expert_param_bytes == 0
 
 

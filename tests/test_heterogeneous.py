@@ -13,17 +13,18 @@ from hypothesis import given, settings, strategies as st
 from repro.core.auto import search
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, P100_16G,
                                    StrategySpec, T4_16G, TPU_V5E, V100_PAPER,
-                                   lm_workload_meta, step_cost)
+                                   step_cost)
 from repro.core.hetero import (balance_batch, balance_stages,
                                hetero_step_cost, plan_placement,
                                proportional_split, scale_meta_stage,
                                strategy_fits_cluster)
 from repro.core.planner import mesh_for_strategy
+from repro.models.lm import model_graph
 
 
 def _meta(batch=256, seq=512, arch="tinyllama-1.1b"):
     from repro.configs import get_config
-    return lm_workload_meta(get_config(arch), batch=batch, seq=seq)
+    return model_graph(get_config(arch), batch, seq).workload_meta()
 
 
 MIXES = [

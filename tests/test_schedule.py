@@ -301,8 +301,9 @@ def test_cost_model_prices_1f1b_memory_below_gpipe():
     """The search's tie-breaker: same bubble, smaller activation term."""
     from repro.configs import get_config
     from repro.core.cost_model import (StrategySpec, TPU_V5E,
-                                       lm_workload_meta, step_cost)
-    meta = lm_workload_meta(get_config("tinyllama-1.1b"), batch=64, seq=512)
+                                       step_cost)
+    from repro.models.lm import model_graph
+    meta = model_graph(get_config("tinyllama-1.1b"), 64, 512).workload_meta()
     g = step_cost(meta, StrategySpec(dp=8, pp=2, micro_batches=8,
                                      schedule="gpipe"), TPU_V5E)
     f = step_cost(meta, StrategySpec(dp=8, pp=2, micro_batches=8,
@@ -315,26 +316,19 @@ def test_cost_model_prices_1f1b_memory_below_gpipe():
 def test_auto_search_enumerates_both_schedules():
     from repro.configs import get_config
     from repro.core.auto import enumerate_strategies
-    from repro.core.cost_model import lm_workload_meta
-    meta = lm_workload_meta(get_config("tinyllama-1.1b"), batch=256, seq=512)
+    from repro.models.lm import model_graph
+    meta = model_graph(get_config("tinyllama-1.1b"), 256, 512).workload_meta()
     scheds = {(s.pp > 1, s.schedule)
               for s in enumerate_strategies(meta, 8)}
     assert (True, "gpipe") in scheds and (True, "1f1b") in scheds
     assert (False, "1f1b") not in scheds     # schedule only matters for pp>1
 
 
-def test_gpipe_aliases_emit_deprecation_and_delegate(monkeypatch):
-    """The pre-schedule-subsystem make_gpipe_* shims warn and delegate
-    (in-repo callers are all migrated; the shims stay for external code)."""
+def test_gpipe_aliases_are_gone():
+    """The pre-schedule-subsystem make_gpipe_* shims (deprecated since the
+    schedule subsystem landed) are removed; make_pipeline_* is the API."""
     import repro.core.pipeline as pipe
-    monkeypatch.setattr(pipe, "make_pipeline_loss",
-                        lambda *a, **k: ("loss", k))
-    monkeypatch.setattr(pipe, "make_pipeline_train_step",
-                        lambda *a, **k: ("step", k))
-    with pytest.warns(DeprecationWarning, match="make_gpipe_loss"):
-        out, kw = pipe.make_gpipe_loss(None, None, None, micro_batches=3)
-    assert out == "loss" and kw["micro_batches"] == 3
-    with pytest.warns(DeprecationWarning, match="make_gpipe_train_step"):
-        out, kw = pipe.make_gpipe_train_step(None, None, None, None,
-                                             micro_batches=2, donate=False)
-    assert out == "step" and kw == {"micro_batches": 2, "donate": False}
+    assert not hasattr(pipe, "make_gpipe_loss")
+    assert not hasattr(pipe, "make_gpipe_train_step")
+    assert callable(pipe.make_pipeline_loss)
+    assert callable(pipe.make_pipeline_train_step)

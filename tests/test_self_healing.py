@@ -369,9 +369,9 @@ def test_evict_remesh_onto_surviving_devices(tmp_path):
         import jax, jax.numpy as jnp, numpy as np
         from repro.ckpt.checkpoint import CheckpointManager
         from repro.configs import get_config
-        from repro.core.cost_model import TPU_V5E, lm_workload_meta
+        from repro.core.cost_model import TPU_V5E
         from repro.core.planner import compile_plan
-        from repro.models.lm import build
+        from repro.models.lm import build, model_graph
         from repro.optim import adamw
         from repro.runtime.elastic import ElasticContext, HostTopology
         cfg = get_config("qwen3-1.7b", smoke=True)
@@ -391,7 +391,7 @@ def test_evict_remesh_onto_surviving_devices(tmp_path):
         devices = surv.devices(jax.devices())
         assert [d.id for d in devices] == [2, 3]
         ctx = ElasticContext(model=model, optimizer=opt)
-        meta = lm_workload_meta(cfg, batch=8, seq=32)
+        meta = model_graph(cfg, 8, 32).workload_meta()
         step, plan2, p2, o2, extra = ctx.rebalance(
             mgr, surv.cluster_spec(), meta, devices=devices,
             search_kw={{"max_pp": 1}})
