@@ -1,14 +1,15 @@
 """CI benchmark-regression gate: run the analytic benchmarks, record the
 headline numbers, fail on regression below the recorded floors.
 
-    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR9.json]
+    PYTHONPATH=src python -m benchmarks.bench_ci [--out BENCH_PR10.json]
 
 The analytic (cost-model / simulated-clock) benchmarks are deterministic —
 pure arithmetic over hardware tables, no execution, no timing noise — so
 they can be gated hard in CI.  This script runs fig2 (schedule grid), fig7
 (heterogeneous balancing), fig9 (nested DP×EP MoE), fig_elastic
-(self-healing straggler eviction), fig_calibration (profile-calibrated
-cost model + drift-triggered rebalance), and the kernel roofline pass
+(self-healing straggler eviction), fig_spot (spot-fleet drain-and-grow vs
+restart-from-checkpoint), fig_calibration (profile-calibrated cost model +
+drift-triggered rebalance), and the kernel roofline pass
 (benchmarks.kernel_bench — fused Pallas kernels vs jnp refs per Hardware
 entry, with interpret-mode numerics), writes every headline metric to a
 JSON artifact, and exits non-zero if any gated metric falls below its
@@ -23,6 +24,14 @@ floor:
     fig_elastic_recovery_ratio >= 0.9     (post-heal throughput lands on
                                            the rebalanced plan's cost-model
                                            prediction; also gated <= 1.1)
+    fig_spot_drain_vs_restart >= 1.3  (drain-and-grow through the outage
+                                       vs idling it out fleet-rigid,
+                                       worst scenario, benchmarks.fig_spot)
+    fig_spot_grow_recovery   >= 0.9   (post-grow throughput lands on the
+                                       full-fleet cost-model prediction;
+                                       also gated <= 1.1, and the re-grown
+                                       plan prices within 5% of the
+                                       never-preempted one)
     kernel_flash_speedup_tpu >= 2.0   (fused flash fwd+bwd vs materialised
                                        scores on the target part)
     kernel_flash_speedup_min >= 1.0   (never analytically slower, any part)
@@ -41,7 +50,8 @@ floor:
                                        benchmarks.fig10_multimodal)
 
 Floors are deliberately below the current values (2.77 / 2.66 / 1.98 /
-2.20 / 0.98 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51 / 1.36 / 1.90) so legitimate
+2.20 / 0.98 / 1.47 / 0.97 / 2.55 / 1.0 / 8.3 / 9.8 / 1.51 / 1.36 / 1.90)
+so legitimate
 refinements have headroom, while a change that destroys a headline win
 (the balancer, the schedule memory model, the ep pricing, the eviction
 loop, the kernel tiling/autotuner, the serving router/simulator, the
@@ -65,6 +75,8 @@ FLOORS = {
     "fig9_nested_vs_flat_speedup": 1.0,
     "fig_elastic_selfheal_vs_naive": 1.5,
     "fig_elastic_recovery_ratio": 0.9,
+    "fig_spot_drain_vs_restart": 1.3,
+    "fig_spot_grow_recovery": 0.9,
     "kernel_flash_speedup_tpu": 2.0,
     "kernel_flash_speedup_min": 1.0,
     "kernel_ssd_speedup_min": 5.0,
@@ -118,6 +130,18 @@ def collect() -> dict:
     out["fig_elastic_per_scenario"] = {
         name: {k: v for k, v in r.items() if k != "scenario"}
         for name, r in fe["per_scenario"].items()}
+
+    # ---- fig_spot: spot-fleet drain-and-grow vs restart (simulated
+    # clock); strict=False for the same record-then-gate reason ----
+    import benchmarks.fig_spot as fig_spot
+    fsp = fig_spot.main(csv=False, strict=False)
+    out["fig_spot_drain_vs_restart"] = fsp["drain_vs_restart_speedup"]
+    out["fig_spot_grow_recovery"] = fsp["grow_recovery"]
+    out["fig_spot_grow_recovery_max"] = fsp["grow_recovery_max"]
+    out["fig_spot_post_grow_vs_initial"] = fsp["post_grow_vs_initial"]
+    out["fig_spot_per_scenario"] = {
+        name: {k: v for k, v in r.items() if k != "scenario"}
+        for name, r in fsp["per_scenario"].items()}
 
     # ---- fig_serve: paged + disaggregated serving (analytic sim);
     # strict=False for the same record-then-gate reason as fig_elastic ----
@@ -184,6 +208,14 @@ def gate(metrics: dict) -> list:
                         "prediction by >10% — the simulated clock and the "
                         "search disagree (fig_elastic_recovery_ratio_max "
                         "> 1.1)")
+    if metrics.get("fig_spot_grow_recovery_max", 1.0) > 1.1:
+        failures.append("post-grow throughput exceeds the full-fleet "
+                        "cost-model prediction by >10% "
+                        "(fig_spot_grow_recovery_max > 1.1)")
+    if metrics.get("fig_spot_post_grow_vs_initial", 1.0) > 1.05:
+        failures.append("the re-grown plan prices >5% above the "
+                        "never-preempted plan — the grow round trip is "
+                        "lossy (fig_spot_post_grow_vs_initial > 1.05)")
     if metrics.get("kernel_numerics_max_err", 1.0) >= 1e-2:
         failures.append("a fused kernel drifted from its jnp oracle "
                         "(kernel_numerics_max_err >= 1e-2)")
@@ -229,7 +261,7 @@ def gate(metrics: dict) -> list:
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="BENCH_PR9.json")
+    ap.add_argument("--out", default="BENCH_PR10.json")
     args = ap.parse_args(argv)
     metrics = collect()
     with open(args.out, "w") as f:

@@ -12,6 +12,8 @@ Sections:
   fig10     M6 multimodal: segment-aware auto-search vs hand-even
             pipeline split on mixed V100+T4               (paper §5.3)
   elastic   self-healing straggler eviction vs naive        (paper §5)
+  spot      spot-fleet drain-and-grow vs restart-from-checkpoint
+            (DESIGN.md §12)
   serve     paged + disaggregated serving vs dense colocated (DESIGN.md §9)
   calibration  profile-calibrated cost model + drift-triggered
             rebalance vs one-shot                        (DESIGN.md §10)
@@ -19,7 +21,7 @@ Sections:
   roofline  per-(arch × shape × mesh) table from the dry-run JSONL
 
 The CI regression gate over the analytic sections is benchmarks/bench_ci.py
-(writes BENCH_PR9.json, fails below the recorded floors).
+(writes BENCH_PR10.json, fails below the recorded floors).
 """
 from __future__ import annotations
 
@@ -75,6 +77,11 @@ def main() -> None:
     print("== elastic: self-healing eviction vs naive straggler (§5) ==")
     import benchmarks.fig_elastic as fig_elastic
     fig_elastic.main()
+
+    print("=" * 72)
+    print("== spot: drain-and-grow vs restart-from-checkpoint (§12) ==")
+    import benchmarks.fig_spot as fig_spot
+    fig_spot.main()
 
     print("=" * 72)
     print("== serve: paged + disaggregated vs dense colocated (§9) ==")

@@ -70,6 +70,11 @@ fig10.main()
 # built-in assertions
 import benchmarks.fig_elastic as fig_elastic
 fig_elastic.main()
+# spot-fleet smoke: the fig_spot drain-and-grow vs restart comparison
+# (hosts shed within the reclaim deadline, re-admitted later, post-grow
+# back on the full-fleet prediction) with its built-in assertions
+import benchmarks.fig_spot as fig_spot
+fig_spot.main()
 # serving smoke: the fig_serve paged+disaggregated comparison with its
 # built-in gates (≥1.3× tokens/s, p99 TTFT no worse), plus one real
 # paged-vs-dense lockstep decode step proving bit-exactness end to end

@@ -9,12 +9,12 @@ The user-facing surface mirrors the paper's API (``import repro as wh``):
             logits = wh.sub("fc", head)(head_params, h)
 """
 from repro.core.auto import (auto_parallel, graph_from_taskgraph,  # noqa: F401
-                             meta_from_taskgraph, search)
+                             search)
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, Hardware,  # noqa: F401
                                    ModelGraph, P100_16G, SegmentMeta,
                                    StrategySpec, T4_16G, TPU_V5E,
                                    V100_PAPER, WorkloadMeta,
-                                   lm_workload_meta, step_cost, throughput)
+                                   step_cost, throughput)
 from repro.core.graph_opt import (GradAgg, LoweredGraph,  # noqa: F401
                                   StrategyNestingError, bridge_cost,
                                   compile_nested_plan, insert_bridges,

@@ -32,7 +32,6 @@ slowest group dominating, and discarded if any group's HBM overflows.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Iterable
 
 from repro.core.cost_model import (ClusterSpec, CostBreakdown, Hardware,
@@ -246,18 +245,7 @@ def graph_from_taskgraph(tg, batch: int, *, name: str = "taskgraph"
     return ModelGraph(name=name, segments=tuple(segments), batch=batch,
                       tp_shardable_fraction=0.95)
 
-
-def meta_from_taskgraph(tg, batch: int, *, name: str = "taskgraph",
-                        param_dtype_bytes: int = 4) -> WorkloadMeta:
-    """DEPRECATED flat taskgraph meta — use :func:`graph_from_taskgraph`.
-
-    Flattening the segment graph reproduces the old sums byte-for-byte
-    (running float accumulation in cluster order, 0.95 shardable
-    fraction, max activation bytes).
-    """
-    warnings.warn(
-        "meta_from_taskgraph is deprecated: use graph_from_taskgraph(tg, "
-        "batch) — it keeps segment boundaries for the planner — and "
-        "flatten with .workload_meta() if a flat WorkloadMeta is needed",
-        DeprecationWarning, stacklevel=2)
-    return graph_from_taskgraph(tg, batch, name=name).workload_meta()
+# NOTE: the deprecated ``meta_from_taskgraph`` shim was removed — use
+# graph_from_taskgraph(tg, batch), which keeps segment boundaries for the
+# planner, and flatten with .workload_meta() if a flat WorkloadMeta is
+# needed.

@@ -40,7 +40,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Mapping
 
 # ---------------------------------------------------------------------------
@@ -889,32 +888,10 @@ def throughput(meta: WorkloadMeta, strat: StrategySpec, hw: Hardware,
     return meta.batch / c.total
 
 
-# ---------------------------------------------------------------------------
-# WorkloadMeta from an LMCfg (meta-driven: pure arithmetic on the config)
-# ---------------------------------------------------------------------------
-
-def lm_workload_meta(cfg, batch: int, seq: int,
-                     act_dtype_bytes: int = 2,
-                     param_dtype_bytes: int = 4) -> WorkloadMeta:
-    """DEPRECATED flat meta derivation — use the segment-aware builders.
-
-    The per-family arithmetic lives in ``repro.models.lm.model_graph``
-    (``Model.graph()``) now; this shim flattens the graph back to a
-    :class:`WorkloadMeta`.  For dense/moe/ssm/hybrid configs the result is
-    byte-identical to the retired if-ladder; vlm and encdec are priced
-    *correctly* here (frontend and cross-attention KV terms included), so
-    their metas intentionally differ from the old ones.
-    """
-    warnings.warn(
-        "lm_workload_meta is deprecated: build a segment-aware ModelGraph "
-        "via repro.models.lm.model_graph(cfg, batch, seq) (or "
-        "Model.graph()) and flatten with .workload_meta() if a flat "
-        "WorkloadMeta is really needed",
-        DeprecationWarning, stacklevel=2)
-    from repro.models.lm import model_graph
-    return model_graph(cfg, batch, seq,
-                       act_dtype_bytes=act_dtype_bytes,
-                       param_dtype_bytes=param_dtype_bytes).workload_meta()
+# NOTE: the deprecated ``lm_workload_meta`` shim was removed — build a
+# segment-aware ModelGraph via repro.models.lm.model_graph(cfg, batch, seq)
+# (or Model.graph()) and flatten with .workload_meta() if a flat
+# WorkloadMeta is really needed.
 
 
 # ---------------------------------------------------------------------------

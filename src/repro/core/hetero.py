@@ -156,6 +156,46 @@ def shrink_cluster(spec: ClusterSpec, removed: dict) -> ClusterSpec:
     return ClusterSpec(groups=tuple(groups))
 
 
+def grow_cluster(spec: ClusterSpec, added: dict,
+                 new_groups: Sequence = ()) -> ClusterSpec:
+    """The grown cluster after admission: ``added`` maps existing group
+    name → number of devices joining that group (a re-admitted host's
+    devices); ``new_groups`` appends whole :class:`DeviceGroup` entries
+    for hardware the cluster has never seen (a spot pool of a new kind).
+
+    Group-keyed counterpart of ``runtime.elastic.HostTopology.with_host``
+    and the symmetric inverse of :func:`shrink_cluster`.  Unknown group
+    names, non-positive device counts, and name collisions between
+    ``new_groups`` and live groups are loud errors — the admission
+    machinery must never silently grow the wrong pool.
+    """
+    by_name = {g.name: g for g in spec.groups}
+    for name, k in added.items():
+        if name not in by_name:
+            raise ValueError(f"unknown device group {name!r}; have "
+                             f"{sorted(by_name)} (new hardware goes in "
+                             "new_groups)")
+        if k <= 0:
+            raise ValueError(
+                f"cannot add {k} devices to group {name!r}; a joining "
+                "host must bring at least one device")
+    seen = set(by_name)
+    for g in new_groups:
+        if g.name in seen:
+            raise ValueError(
+                f"new group {g.name!r} collides with an existing group; "
+                "grow it via added= instead")
+        if g.n_devices <= 0:
+            raise ValueError(
+                f"new group {g.name!r} offers n_devices={g.n_devices}")
+        seen.add(g.name)
+    groups = [dataclasses.replace(g, n_devices=g.n_devices
+                                  + added.get(g.name, 0))
+              for g in spec.groups]
+    groups.extend(new_groups)
+    return ClusterSpec(groups=tuple(groups))
+
+
 def partition_cluster(spec: ClusterSpec, names: Sequence[str]
                       ) -> tuple:
     """Split ``spec`` into (named groups, the rest) — two ClusterSpecs.

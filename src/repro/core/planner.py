@@ -529,9 +529,10 @@ def compile_plan_from_cluster(cluster: Cluster, model,
     """Cases-1..5 path: strategy inferred from the recorded TaskGraph.
 
     On a mixed-hardware cluster, pass the workload's ``WorkloadMeta``
-    (e.g. from :func:`repro.core.auto.meta_from_taskgraph`) to get a
-    balanced placement on the plan; without it — or with a homogeneous
-    ``cluster.spec`` — ``plan.placement`` stays None.
+    (e.g. ``graph_from_taskgraph(tg, batch).workload_meta()`` from
+    :mod:`repro.core.auto`) to get a balanced placement on the plan;
+    without it — or with a homogeneous ``cluster.spec`` —
+    ``plan.placement`` stays None.
     """
     strat = strategy_from_taskgraph(cluster)
     return compile_plan(model, cluster.mesh, strategy=strat,

@@ -1,17 +1,18 @@
-"""Fault-tolerant, self-healing training driver.
+"""Fault-tolerant, self-healing training driver (CLI).
 
 Composes the whole stack: config → model → Whale plan (manual or
 auto-parallel) → data pipeline → jitted train step → fault-tolerant loop
 with async checkpoints, straggler monitoring, and auto-resume.
 
-:class:`TrainController` closes Whale's resource-adaptability loop
-(DESIGN.md §7): per-host step times feed a
-:class:`~repro.runtime.straggler.HostStragglerAggregator`; a sustained
-straggler is **evicted** (`shrink_devices`), the job **rebalances** onto
-the surviving hardware mix (`ElasticContext.rebalance` — the hetero-aware
-search picks the new strategy and placement), the committed checkpoint
-restores into the new plan, the data pipeline resumes exactly-once, and
-training continues.
+The multi-host control loop lives in
+:mod:`repro.runtime.controller` — the event-driven membership runtime
+(DESIGN.md §12) that closes Whale's resource-adaptability loop in both
+directions: sustained stragglers and spot-reclaimed hosts are **evicted**
+and the job rebalances onto the survivors; joining hosts are **admitted**
+and the job rebalances onto the grown fleet.  ``TrainController`` is kept
+here as a thin alias of
+:class:`~repro.runtime.controller.ClusterController` for callers of the
+old name.
 
 Usage (CPU sanity run)::
 
@@ -25,6 +26,15 @@ simulated hosts; host 1 goes 4× slower at step 6 and is evicted)::
     python -m repro.launch.train --arch tinyllama-1.1b --smoke \
         --steps 20 --batch 8 --seq 64 --hosts 2 --inject-slow 1:6:4
 
+Spot fleet: host 1 gets a reclaim warning at step 6 (2-step deadline) and
+host 2 re-joins with 2 devices at step 14 (6 visible devices = 2 live
+hosts × 2 devices + 2 spare for the join)::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=6 \
+    python -m repro.launch.train --arch tinyllama-1.1b --smoke \
+        --steps 24 --batch 8 --seq 64 --hosts 2 --devices-per-host 2 \
+        --inject-preempt 1:6:2 --inject-join 2:14:2
+
 Multi-host TPU: every host runs the same command; ``--distributed`` calls
 ``jax.distributed.initialize()`` first (single-process here, exercised via
 the simulated :class:`~repro.runtime.elastic.HostTopology` instead).
@@ -33,7 +43,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
@@ -41,19 +50,22 @@ import jax.numpy as jnp
 from repro.ckpt.checkpoint import CheckpointManager
 from repro.configs import ARCH_NAMES, get_config
 from repro.core.auto import auto_parallel
-from repro.core.cost_model import (StrategySpec, TPU_V5E, step_cost,
-                                   step_cost_features)
+from repro.core.cost_model import StrategySpec, TPU_V5E, step_cost_features
 from repro.core.planner import compile_plan, mesh_for_strategy
 from repro.data.pipeline import DataCfg, MultimodalPipeline, TokenPipeline
 from repro.optim.optimizer import Schedule, adamw, adafactor
-from repro.runtime.elastic import (ElasticContext, HostTopology,
-                                   plan_for_cluster)
+from repro.runtime.controller import (CalibrationConfig, ClusterController,
+                                      ElasticConfig)
+from repro.runtime.elastic import HostTopology
 from repro.runtime.fault_tolerance import FaultTolerantLoop
-from repro.runtime.faults import (FaultInjector, SlowHost, CrashStep,
-                                  DriftHost)
+from repro.runtime.faults import (FaultInjector, JoinHost, SlowHost,
+                                  CrashStep, DriftHost, SpotPreemption)
 from repro.runtime.profiler import Profiler
-from repro.runtime.straggler import (HostStragglerAggregator,
-                                     StragglerMonitor)
+from repro.runtime.straggler import StragglerMonitor
+
+# the old name, re-exported for existing callers/tests; the implementation
+# moved to repro.runtime.controller
+TrainController = ClusterController
 
 
 def parse_mesh(spec: str, *, stage: int = 1):
@@ -65,449 +77,8 @@ def parse_mesh(spec: str, *, stage: int = 1):
     return jax.make_mesh(dims, ("pod", "data", "model"))
 
 
-@dataclasses.dataclass
-class CalibrationConfig:
-    """Knobs for the drift-triggered rebalance loop (DESIGN.md §10).
-
-    The controller anchors the cost model's time scale to the first
-    ``min_steps`` measured steps of each plan (median measured / predicted
-    — absorbing the simulated clock's arbitrary units and constant
-    modelling bias), then watches the *relative* skew
-    ``measured / (predicted · anchor)``.  ``patience`` consecutive steps
-    above ``1 + skew`` trigger a recalibration: the profiler's windowed
-    observations re-fit each group's ``Hardware`` table and
-    ``ElasticContext.rebalance(hardware=...)`` re-plans with measured
-    rates — no host is evicted.  ``max_rebalances=0`` records
-    observations (``--profile``) without ever rebalancing.
-    """
-    skew: float = 0.25
-    patience: int = 5
-    min_steps: int = 8
-    window: int = 256               # observations per group fed to each fit
-    max_rebalances: int = 2
-
-
-@dataclasses.dataclass
-class ElasticConfig:
-    """Knobs for the self-healing loop (DESIGN.md §7)."""
-    topology: HostTopology
-    threshold: float = 2.0          # straggler flag at mean + k·std
-    patience: int = 3               # sustained outlier steps before flagging
-    warmup: int = 5                 # per-monitor warmup (compile steps)
-    min_hosts: int = 1              # never evict below this
-    max_rebalances: int = 2         # then ride out the degradation
-    overlap: float = 0.5            # comm/compute overlap for the search
-    search_kw: dict = dataclasses.field(
-        # stay in the checkpoint's non-pipelined parameter layout: a live
-        # re-plan into a padded pipeline layout would need a migration
-        default_factory=lambda: {"max_pp": 1})
-    # predicted-vs-measured drift detection (None = off)
-    calibration: CalibrationConfig | None = None
-
-
-class TrainController:
-    """Self-healing elastic training: straggler → evict → rebalance → resume.
-
-    State machine (``.phase``)::
-
-        TRAINING ──straggler flagged──▶ DEGRADED ──stop+ckpt──▶ REBALANCING
-           ▲                                                        │
-           └────────── restore into the re-planned mesh ◀───────────┘
-        terminal: DONE (n_steps reached) | PREEMPTED (SIGTERM, final ckpt
-        committed — a relaunch auto-resumes) | FAILED (retry budget
-        exhausted and re-raise, after a final checkpoint)
-
-    One :class:`FaultTolerantLoop` segment runs per plan; per-host step
-    times (real, or synthesized by a
-    :class:`~repro.runtime.faults.FaultInjector` on the simulated
-    multi-host clock) feed the aggregator, and a sustained flag stops the
-    segment with a final synchronous checkpoint.  Eviction shrinks the
-    :class:`~repro.runtime.elastic.HostTopology`, the hetero-aware search
-    re-plans over the survivors' :class:`ClusterSpec`, and the committed
-    checkpoint restores into the new plan — data-pipeline position
-    included, so the global sample stream continues exactly-once.
-
-    Batches are fetched idempotently per step (a retried step replays the
-    *same* batch — the bounded-retry path cannot skip samples).
-    """
-
-    def __init__(self, model, cfg, optimizer, data: TokenPipeline,
-                 ckpt: CheckpointManager, *, elastic: ElasticConfig,
-                 batch: int, seq: int, save_every: int = 50,
-                 max_retries: int = 3, injector: FaultInjector | None = None,
-                 log_every: int = 10, verbose: bool = True):
-        self.model = model
-        self.cfg = cfg
-        self.optimizer = optimizer
-        self.data = data
-        self.ckpt = ckpt
-        self.elastic = elastic
-        self.topology = elastic.topology
-        # flattened for the elastic search (max_pp=1 default: segment
-        # boundaries are irrelevant to a pure DP/TP re-plan)
-        self.meta = model.graph(batch, seq).workload_meta()
-        self.save_every = save_every
-        self.max_retries = max_retries
-        self.injector = injector
-        self.log_every = log_every
-        self.verbose = verbose
-        self.phase = "TRAINING"
-        self.events: list = []
-        self.losses: list = []
-        self.calibration = elastic.calibration
-        self.profiler = Profiler()
-        self.aggregator = HostStragglerAggregator(
-            n_hosts=len(self.topology.hosts),
-            threshold=elastic.threshold, patience=elastic.patience,
-            warmup=elastic.warmup)
-        self.aggregator.reset(self.topology.host_ids)
-        self._batch_step = -1
-        self._batch = None
-        self._data_state_before = None
-
-    # ------------------------------------------------------------- logging
-    def _log(self, msg: str) -> None:
-        if self.verbose:
-            print(msg)
-
-    def _event(self, kind: str, **kw) -> None:
-        self.events.append({"kind": kind, **kw})
-
-    # ------------------------------------------------------------ planning
-    def _plan_current(self):
-        """Search the surviving cluster and compile the plan + mesh."""
-        plan, cand = plan_for_cluster(
-            self.model, self.meta, self.topology.cluster_spec(),
-            devices=self.topology.devices(jax.devices()),
-            overlap=self.elastic.overlap, search_kw=self.elastic.search_kw)
-        return plan, float(cand.total)
-
-    def _predicted_total(self, plan) -> float:
-        """The cost model's step-time prediction for the current plan."""
-        if plan.placement is not None:
-            return float(plan.placement.cost.total)
-        g = self.topology.cluster_spec().groups[0]
-        return float(step_cost(self.meta, plan.strategy, g.hw,
-                               overlap=self.elastic.overlap).total)
-
-    def _group_features(self, plan) -> dict:
-        """Per device group: (calibration features, predicted s, hosts).
-
-        The features (``cost_model.step_cost_features`` of the group's
-        unit of work) are what the profiler attaches to each measured
-        group step time, so ``calibrate.fit`` can invert them back into
-        ``Hardware`` rates.
-        """
-        members = self.topology.group_hosts()
-        ov = self.elastic.overlap
-        out = {}
-        if plan.placement is not None:
-            for u in plan.placement.units:
-                if u.kind != "group":
-                    continue
-                out[u.group.name] = (
-                    step_cost_features(u.meta, u.strategy, u.group.hw,
-                                       overlap=ov),
-                    float(u.cost.total), members.get(u.group.name, []))
-        else:
-            g = self.topology.cluster_spec().groups[0]
-            out[g.name] = (
-                step_cost_features(self.meta, plan.strategy, g.hw,
-                                   overlap=ov),
-                float(step_cost(self.meta, plan.strategy, g.hw,
-                                overlap=ov).total),
-                members.get(g.name, list(self.topology.host_ids)))
-        return out
-
-    def _retune_model(self, spec) -> None:
-        """Re-autotune kernel tiles for ``spec`` and rebuild the model.
-
-        Plans re-run the tile autotuner inside ``compile_plan``, but the
-        *executing model* bakes block sizes into its config at startup —
-        after a rebalance changes the hardware mix (eviction) or the
-        rates (recalibration), those baked tiles are stale.  Tiles don't
-        change parameter shapes, so the rebuilt model restores the same
-        checkpoint.
-        """
-        cfg = self.cfg
-        if "pallas" not in (cfg.attn_impl, cfg.xent_impl, cfg.ssd_impl):
-            return
-        if not getattr(cfg, "n_heads", 0):
-            return
-        from repro.kernels.autotune import DEFAULT_TILES, autotune_cluster
-        tiles_by_group = autotune_cluster(
-            spec, head_dim=cfg.hd,
-            group=cfg.n_heads // max(cfg.n_kv_heads, 1) or 1,
-            d_model=cfg.d_model, vocab=cfg.padded_vocab)
-        tiles = list(tiles_by_group.values())
-        lo = tiles[0] if tiles else DEFAULT_TILES
-        for t in tiles[1:]:                 # min over groups: fits everywhere
-            lo = dataclasses.replace(lo, **{
-                f.name: min(getattr(lo, f.name), getattr(t, f.name))
-                for f in dataclasses.fields(t)})
-        new_cfg = dataclasses.replace(
-            cfg, attn_block_q=lo.block_q, attn_block_k=lo.block_k,
-            xent_block_t=lo.xent_block_t, xent_block_v=lo.xent_block_v,
-            ssd_chunk=(lo.ssd_chunk if cfg.family in ("ssm", "hybrid")
-                       else cfg.ssd_chunk))
-        if new_cfg != cfg:
-            from repro.models.lm import build
-            self.cfg = new_cfg
-            self.model = build(new_cfg)
-            self._event("retune", tiles=str(lo))
-            self._log(f"[retune] kernel tiles re-sized for "
-                      f"{'+'.join(g.name for g in spec.groups)}: {lo}")
-
-    # --------------------------------------------- drift detection (§10)
-    def _observe_calibration(self, i, times, cal, feats, predicted,
-                             loop, pending) -> None:
-        """Feed the profiler and watch predicted-vs-measured skew.
-
-        First ``min_steps`` measured steps of a plan anchor the model's
-        time scale; afterwards each step records per-group observations
-        (in anchored units, so fitted tables stay comparable to the
-        priors) and ``patience`` consecutive steps with skew above
-        ``1 + skew`` stop the segment for a recalibrating rebalance.
-        """
-        cfg = self.calibration
-        measured = max(times.values())
-        cal["n"] += 1
-        if cal["n"] <= cfg.min_steps:
-            cal["sum"] += measured
-            if cal["n"] == cfg.min_steps:
-                cal["anchor"] = (cal["sum"] / cfg.min_steps) / predicted
-            return
-        anchor = cal["anchor"]
-        for gname, (f, _p, members) in feats.items():
-            t_g = max((times[h] for h in members if h in times), default=0.0)
-            if t_g > 0.0:
-                self.profiler.record_step(gname, t_g / anchor, f, step=i)
-        skew = measured / (predicted * anchor)
-        if skew > 1.0 + cfg.skew:
-            cal["hot"] += 1
-        else:
-            cal["hot"] = 0
-        if (cal["hot"] >= cfg.patience and not pending
-                and cal["trigger"] is None
-                and self._recalibrations < cfg.max_rebalances):
-            cal["trigger"] = skew
-            self.phase = "DEGRADED"
-            self._log(f"[drift] measured/predicted skew {skew:.2f} "
-                      f"sustained {cfg.patience} steps at step {i}; "
-                      f"stopping to recalibrate")
-            loop.request_stop()
-
-    def _build_step_fn(self, plan):
-        batch0 = {k: jnp.asarray(v) for k, v in self._peek_batch().items()}
-        with plan.mesh:
-            jfn = plan.jit_train_step(self.optimizer, batch0, donate=False)
-
-        def one_step(i, st):
-            if self.injector is not None:
-                self.injector.maybe_preempt(i)
-            batch = self._batch_for(i)
-            if self.injector is not None:
-                self.injector.maybe_fail(i)
-            with plan.mesh:
-                p, o, m = jfn(st["params"], st["opt"], batch,
-                              jnp.asarray(i))
-            self.losses.append(float(m["loss"]))
-            if i % self.log_every == 0:
-                self._log(f"  step {i:5d}  loss {self.losses[-1]:.4f}")
-            return {"params": p, "opt": o}
-
-        return one_step
-
-    # -------------------------------------------------- exactly-once data
-    def _peek_batch(self) -> dict:
-        """The next step's batch (cached, so the step replays it)."""
-        return self._batch_for(self._batch_step + 1)
-
-    def _batch_for(self, step: int) -> dict:
-        """Idempotent per-step batch: a retried step replays the same
-        samples instead of silently consuming the next draw."""
-        if step != self._batch_step:
-            self._data_state_before = self.data.state_dict()
-            raw = self.data.next_batch()
-            self._batch = {k: jnp.asarray(v) for k, v in raw.items()}
-            self._batch_step = step
-        return self._batch
-
-    def _data_state_at(self, step: int) -> dict:
-        """The pipeline position with exactly ``step`` batches consumed —
-        what a checkpoint committed at ``step`` must record.  A save at
-        the *failed* step (retry budget exhausted) lands one batch behind
-        the cursor, so the pre-fetch snapshot is returned instead."""
-        consumed = self._batch_step + 1
-        if step == self._batch_step and self._data_state_before is not None:
-            return dict(self._data_state_before)
-        if step != consumed:
-            raise RuntimeError(
-                f"data pipeline out of sync: checkpoint at step {step} but "
-                f"{consumed} batches consumed")
-        return self.data.state_dict()
-
-    # ------------------------------------------------------------ the loop
-    def run(self, n_steps: int, seed: int = 0) -> dict:
-        plan, predicted = self._plan_current()
-        self._log(f"[elastic] initial plan: "
-                  f"{plan.strategy.describe()} on "
-                  f"{self.topology.n_devices} devices "
-                  f"(predicted {predicted*1e3:.1f} ms/step)")
-        with plan.mesh:
-            params = plan.init_params(jax.random.key(seed))
-            opt_state = jax.jit(self.optimizer.init)(params)
-        step = 0
-        resume = self.ckpt.restore_latest({"params": params,
-                                           "opt": opt_state})
-        if resume is not None:
-            step, tree, extra = resume
-            params, opt_state = tree["params"], tree["opt"]
-            if "data" in extra:
-                self.data.load_state_dict(extra["data"])
-                self._batch_step, self._batch = step - 1, None
-            self._log(f"[resume] from step {step}")
-        state = {"params": params, "opt": opt_state}
-
-        rebalances = 0
-        self._recalibrations = 0
-        while step < n_steps:
-            pending: list = []
-            segment_start = step
-            # drift detection state for this plan segment: the anchor maps
-            # the cost model's time scale onto the measured clock, so the
-            # skew watched below is relative to *this plan's* own baseline
-            cal = {"n": 0, "sum": 0.0, "anchor": None, "hot": 0,
-                   "trigger": None}
-            feats = self._group_features(plan) if self.calibration else {}
-            predicted = self._predicted_total(plan)
-            loop = FaultTolerantLoop(self.ckpt, save_every=self.save_every,
-                                     max_retries=self.max_retries)
-
-            def on_step(i, st, dt, _loop=loop, _pending=pending,
-                        _start=segment_start, _cal=cal, _feats=feats,
-                        _pred=predicted):
-                if i == _start:
-                    return          # jit-compile step would poison warmup
-                hosts = self.topology.host_ids
-                if self.injector is not None:
-                    times = self.injector.host_times(i, base=dt, hosts=hosts)
-                else:
-                    # single-process: every host reports the global step
-                    # time; a real fleet reports per-host measurements
-                    times = {h: dt for h in hosts}
-                if self.calibration is not None and _pred > 0.0:
-                    self._observe_calibration(i, times, _cal, _feats, _pred,
-                                              _loop, _pending)
-                for h in self.aggregator.observe(times):
-                    self._event("flag", step=i, host=h, dt=times[h],
-                                mean=self.aggregator.monitors[h].mean
-                                if h in self.aggregator.monitors else None)
-                    self._log(f"[straggler] host {h} flagged at step {i} "
-                              f"(dt={times[h]:.3f}s)")
-                    survivors = len(self.topology.hosts) - len(_pending) - 1
-                    if survivors < self.elastic.min_hosts:
-                        self._log(f"[straggler] NOT evicting host {h}: "
-                                  f"{survivors} survivors < min_hosts="
-                                  f"{self.elastic.min_hosts}")
-                        continue
-                    if rebalances >= self.elastic.max_rebalances:
-                        self._log("[straggler] rebalance budget exhausted; "
-                                  "riding out the degradation")
-                        continue
-                    _pending.append(h)
-                if _pending:
-                    self.phase = "DEGRADED"
-                    _loop.request_stop()
-
-            step_fn = self._build_step_fn(plan)
-            try:
-                step, state = loop.run(
-                    state=state, step_fn=step_fn, n_steps=n_steps,
-                    start_step=step,
-                    extra_fn=lambda st, s: {"data": self._data_state_at(s)},
-                    on_step=on_step)
-            except Exception:
-                self.phase = "FAILED"
-                raise
-            if loop.preempted:
-                self.phase = "PREEMPTED"
-                self._event("preempted", step=step,
-                            pending_evictions=list(pending))
-                self._log(f"[preempt] SIGTERM at step {step}; final "
-                          f"checkpoint committed")
-                break
-            if (not pending and cal["trigger"] is None) or step >= n_steps:
-                # n_steps reached — a flag raised on the very last step
-                # must not trigger a rebalance whose result is discarded
-                break
-            self.phase = "REBALANCING"
-            hardware = None
-            if pending:
-                # ---- evict + rebalance + resume ----
-                for h in pending:
-                    self.aggregator.evict(h)
-                self.topology = self.topology.without(set(pending))
-                spec = self.topology.cluster_spec()
-                self._event("evict", step=step, hosts=list(pending),
-                            surviving_devices=self.topology.n_devices)
-                self._log(f"[evict] hosts {pending} at step {step}; "
-                          f"rebalancing onto {self.topology.n_devices} "
-                          f"devices")
-            else:
-                # ---- drift-triggered recalibration: same fleet, re-fitted
-                # Hardware tables — continuous rebalancing (DESIGN.md §10)
-                spec = self.topology.cluster_spec()
-                cal_spec, hardware = self.profiler.fit_spec(
-                    spec, last_n=self.calibration.window)
-                spec = cal_spec
-                self._event("drift", step=step, skew=cal["trigger"],
-                            hardware={
-                                n: {"eff_flops":
-                                    h.peak_flops * h.mxu_eff,
-                                    "n_obs": h.n_observations}
-                                for n, h in hardware.items()})
-                self._log(f"[drift] recalibrating at step {step} "
-                          f"(skew {cal['trigger']:.2f}); re-planning with "
-                          f"measured rates")
-            # stale-tiles fix: the executing model baked kernel tiles for
-            # the old mix/rates — re-autotune before re-meshing
-            self._retune_model(spec)
-            ectx = ElasticContext(model=self.model, optimizer=self.optimizer)
-            t0 = time.monotonic()
-            step, plan, params, opt_state, extra = ectx.rebalance(
-                self.ckpt, self.topology.cluster_spec(), self.meta,
-                devices=self.topology.devices(jax.devices()),
-                overlap=self.elastic.overlap,
-                search_kw=self.elastic.search_kw,
-                hardware=hardware)
-            if "data" in extra:
-                self.data.load_state_dict(extra["data"])
-            self._batch_step, self._batch = step - 1, None
-            state = {"params": params, "opt": opt_state}
-            kind = "rebalance" if pending else "recalibrate"
-            if pending:
-                rebalances += 1
-                self.profiler.clear()   # old groups' names/shares are stale
-            else:
-                self._recalibrations += 1
-            self.aggregator.reset(self.topology.host_ids)
-            self._event(kind, step=step,
-                        strategy=plan.strategy.describe(),
-                        downtime_s=time.monotonic() - t0,
-                        placement=(plan.placement.describe()
-                                   if plan.placement else None))
-            self._log(f"[{kind}] resumed at step {step} with "
-                      f"{plan.strategy.describe()}")
-            self.phase = "TRAINING"
-        if self.phase not in ("FAILED", "PREEMPTED") and step >= n_steps:
-            self.phase = "DONE"
-        return {"final_step": step, "state": state, "events": self.events,
-                "losses": self.losses, "phase": self.phase,
-                "topology": self.topology}
-
-
-def _parse_injections(slow: list, crash: list, drift: list = ()) -> tuple:
+def _parse_injections(slow: list, crash: list, drift: list = (),
+                      preempt: list = (), join: list = ()) -> tuple:
     scenarios = []
     for s in slow or []:
         host, start, factor = s.split(":")
@@ -522,6 +93,15 @@ def _parse_injections(slow: list, crash: list, drift: list = ()) -> tuple:
         host, start, end, factor = d.split(":")
         scenarios.append(DriftHost(host=int(host), start_step=int(start),
                                    end_step=int(end), factor=float(factor)))
+    for p in preempt or []:
+        bits = p.split(":")
+        scenarios.append(SpotPreemption(
+            host=int(bits[0]), warn_step=int(bits[1]),
+            deadline_steps=int(bits[2]) if len(bits) > 2 else 2))
+    for j in join or []:
+        host, step, n_dev = j.split(":")
+        scenarios.append(JoinHost(host=int(host), step=int(step),
+                                  n_devices=int(n_dev)))
     return tuple(scenarios)
 
 
@@ -586,6 +166,22 @@ def main(argv=None) -> dict:
     ap.add_argument("--inject-crash", action="append", default=[],
                     metavar="STEP[:TIMES]",
                     help="fault injection: transient step failure at STEP")
+    # ---- cluster membership (DESIGN.md §12: spot fleets, scale-up) ----
+    ap.add_argument("--inject-preempt", action="append", default=[],
+                    metavar="HOST:WARN[:DEADLINE]",
+                    help="spot reclaim: HOST is warned at step WARN and "
+                         "vanishes DEADLINE steps later (default 2; 0 = "
+                         "missed notice, falls back to the last committed "
+                         "checkpoint) (repeatable)")
+    ap.add_argument("--inject-join", action="append", default=[],
+                    metavar="HOST:STEP:NDEV",
+                    help="scale-up / spot re-admission: HOST offers NDEV "
+                         "devices from STEP on (repeatable; needs spare "
+                         "visible devices — see --devices-per-host)")
+    ap.add_argument("--devices-per-host", type=int, default=0,
+                    help="devices each simulated host owns (default: "
+                         "device count / --hosts); set it below that to "
+                         "leave spare devices for --inject-join")
     ap.add_argument("--patience", type=int, default=3)
     ap.add_argument("--straggler-warmup", type=int, default=3)
     ap.add_argument("--max-rebalances", type=int, default=2)
@@ -666,12 +262,22 @@ def main(argv=None) -> dict:
     # ---- self-healing controller path (simulated multi-host) ----
     if args.hosts > 1:
         n = len(jax.devices())
-        if n % args.hosts:
-            raise SystemExit(f"--hosts {args.hosts} must divide the "
-                             f"device count ({n})")
-        topology = HostTopology.uniform(args.hosts, n // args.hosts, TPU_V5E)
+        if args.devices_per_host:
+            if args.hosts * args.devices_per_host > n:
+                raise SystemExit(
+                    f"--hosts {args.hosts} × --devices-per-host "
+                    f"{args.devices_per_host} exceeds the device count "
+                    f"({n})")
+            dph = args.devices_per_host
+        else:
+            if n % args.hosts:
+                raise SystemExit(f"--hosts {args.hosts} must divide the "
+                                 f"device count ({n})")
+            dph = n // args.hosts
+        topology = HostTopology.uniform(args.hosts, dph, TPU_V5E)
         scenarios = _parse_injections(args.inject_slow, args.inject_crash,
-                                      args.inject_drift)
+                                      args.inject_drift,
+                                      args.inject_preempt, args.inject_join)
         # nominal clock: injected scenarios play on a fully simulated
         # timeline, so detection is deterministic regardless of machine
         # load (a real deployment feeds measured per-host times instead)
@@ -700,11 +306,13 @@ def main(argv=None) -> dict:
             print(ctl.profiler.report(ctl.topology.cluster_spec()))
         evictions = [e for e in out["events"] if e["kind"] == "evict"]
         recals = [e for e in out["events"] if e["kind"] == "recalibrate"]
+        joins = [e for e in out["events"] if e["kind"] == "join"]
         loss_str = (f", loss {out['losses'][0]:.4f} → {out['losses'][-1]:.4f}"
                     if out["losses"] else " (resumed already complete)")
         print(f"[done] step {out['final_step']} phase {out['phase']}, "
               f"{len(evictions)} eviction(s), "
-              f"{len(recals)} recalibration(s){loss_str}")
+              f"{len(recals)} recalibration(s), "
+              f"{len(joins)} join(s){loss_str}")
         return {"final_step": out["final_step"], "losses": out["losses"],
                 "events": out["events"], "phase": out["phase"]}
 

@@ -595,9 +595,10 @@ def param_count(params) -> int:
 # if-ladder.  Matmul-dominant terms only (the granularity the roofline
 # uses).  For the layer-homogeneous families (dense/moe/ssm/hybrid) the
 # single "stack" segment computes the EXACT legacy expressions, so
-# ``model_graph(cfg, b, s).workload_meta()`` is byte-identical to the old
-# ``lm_workload_meta`` — tests/test_model_graph.py freezes that formula
-# and guards the identity across every shipped config.
+# ``model_graph(cfg, b, s).workload_meta()`` is byte-identical to the
+# retired ``lm_workload_meta`` if-ladder — tests/test_model_graph.py
+# freezes that formula and guards the identity across every shipped
+# config.
 #
 # The multimodal families get real graphs (and real pricing fixes):
 #

@@ -1,9 +1,22 @@
 """Runtime services: fault tolerance, straggler mitigation, elastic scaling,
-fault injection (the self-healing loop of DESIGN.md §7)."""
+fault injection, and the event-driven cluster-membership controller (the
+self-healing loop of DESIGN.md §7 and the membership runtime of §12)."""
 from repro.runtime.elastic import (ElasticContext, HostTopology,  # noqa: F401
-                                   SimHost, shrink_devices)
+                                   SimHost, grow_devices, shrink_devices)
 from repro.runtime.fault_tolerance import FaultTolerantLoop  # noqa: F401
-from repro.runtime.faults import (CrashStep, FaultInjector,  # noqa: F401
-                                  Preemption, SimClock, SlowHost)
+from repro.runtime.faults import (CrashStep, DriftHost,  # noqa: F401
+                                  FaultInjector, JoinHost, Preemption,
+                                  SimClock, SlowHost, SpotPreemption)
 from repro.runtime.straggler import (HostStragglerAggregator,  # noqa: F401
                                      StragglerMonitor)
+# controller imports the siblings above, so it goes last (no cycle: none of
+# elastic/faults/straggler import it back)
+from repro.runtime.controller import (CalibrationConfig,  # noqa: F401
+                                      ClusterController, ClusterEvent,
+                                      DriftSource, DriftSustained,
+                                      ElasticConfig, HostJoin, HostLost,
+                                      IllegalTransition, InjectorSource,
+                                      MembershipChange,
+                                      MembershipStateMachine,
+                                      PreemptionWarning, StragglerSource,
+                                      StragglerSustained)

@@ -1,0 +1,880 @@
+"""Event-driven cluster-membership runtime (DESIGN.md §12).
+
+Whale's resource-adaptability story (§5) is bidirectional: a production
+fleet both loses capacity (stragglers, spot reclaims, dead hosts) and
+gains it (hosts joining, spot re-admission).  This module is the one
+control loop that handles every case:
+
+- **Typed events** — :class:`StragglerSustained`, :class:`DriftSustained`,
+  :class:`PreemptionWarning`, :class:`HostLost`, :class:`HostJoin` — are
+  produced by pluggable *sources* (:class:`StragglerSource` over the
+  per-host monitors, :class:`DriftSource` over the predicted-vs-measured
+  skew watch, :class:`InjectorSource` over the fault injector's scenario
+  playback; a real deployment adds a scheduler-API source).
+- **A small state machine** — RUNNING → DRAINING → REBALANCING → RESUMING
+  → RUNNING, with terminal DONE / PREEMPTED / FAILED — serialises
+  concurrent membership signals: events folding into the *pending*
+  :class:`MembershipChange` while draining, deferring while a change is
+  being applied, and raising :class:`IllegalTransition` everywhere else.
+- **One apply path** — :meth:`ClusterController.apply_membership_change`
+  is the only place the fleet reshapes: evictions shrink the
+  :class:`~repro.runtime.elastic.HostTopology`, admissions grow it
+  (``with_host``), recalibration re-fits the hardware tables, and the
+  tail is identical for all of them — re-autotune kernel tiles, re-plan
+  with the hetero-aware search, restore the committed checkpoint into
+  the new plan, reshard the data stream, resume.  There is deliberately
+  no evict-vs-grow branch anywhere else.
+
+The drain discipline for spot reclaim: a :class:`PreemptionWarning`
+carries the step deadline by which the host vanishes; the controller
+stops the segment with a final synchronous checkpoint (one step — well
+inside real spot notice windows), sheds the host, and re-plans on the
+survivors.  If the host dies *before* the drain commits
+(:class:`HostLost`), the in-flight state is untrusted: the loop aborts
+**without** a final save and the apply path restores the last committed
+checkpoint, replaying the lost steps exactly-once (the data pipeline
+position is part of the checkpoint, and batches are a pure function of
+the step).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.core.cost_model import step_cost, step_cost_features
+from repro.data.pipeline import TokenPipeline
+from repro.runtime.elastic import (ElasticContext, HostTopology, SimHost,
+                                   plan_for_cluster)
+from repro.runtime.fault_tolerance import FaultTolerantLoop
+from repro.runtime.faults import FaultInjector
+from repro.runtime.profiler import Profiler
+from repro.runtime.straggler import HostStragglerAggregator
+
+
+# ---------------------------------------------------------------------------
+# typed cluster events
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ClusterEvent:
+    """Base: something happened to the fleet at ``step``."""
+    step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerSustained(ClusterEvent):
+    """``host`` has been a sustained step-time outlier (evict it)."""
+    host: int
+    dt: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftSustained(ClusterEvent):
+    """Measured/predicted step-cost skew held above threshold (re-fit
+    the hardware tables and re-plan; no host is evicted)."""
+    skew: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptionWarning(ClusterEvent):
+    """The scheduler reclaims ``host`` at ``deadline_step`` (spot/TPU
+    maintenance notice): drain and shed it before then."""
+    host: int
+    deadline_step: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HostLost(ClusterEvent):
+    """``host`` vanished without a successful drain: the in-flight
+    segment state is untrusted — fall back to the last committed
+    checkpoint."""
+    host: int
+
+
+@dataclasses.dataclass(frozen=True)
+class HostJoin(ClusterEvent):
+    """``host`` (a :class:`SimHost`: id, hardware, device count) offers
+    capacity — scale-up or spot re-admission."""
+    host: SimHost
+
+
+# ---------------------------------------------------------------------------
+# the membership change a batch of events folds into
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MembershipChange:
+    """The net fleet delta one REBALANCING pass applies.
+
+    Events arriving while a segment drains merge here — a straggler flag
+    and a preemption warning in the same segment become one evict set and
+    one re-plan, not two serial rebalances.
+    """
+    evict: tuple = ()               # host ids leaving
+    admit: tuple = ()               # SimHosts joining
+    recalibrate: float = 0.0        # sustained skew (0.0 = no re-fit)
+    abort: bool = False             # drain failed: restore last commit
+    deadline_step: int | None = None
+    reasons: tuple = ()             # event class names, for the log
+
+    @property
+    def is_noop(self) -> bool:
+        return not (self.evict or self.admit or self.recalibrate)
+
+    def merged(self, other: "MembershipChange") -> "MembershipChange":
+        admit = list(self.admit)
+        admit += [h for h in other.admit
+                  if h.host not in {a.host for a in admit}]
+        deadlines = [d for d in (self.deadline_step, other.deadline_step)
+                     if d is not None]
+        return MembershipChange(
+            evict=tuple(dict.fromkeys(self.evict + other.evict)),
+            admit=tuple(admit),
+            recalibrate=max(self.recalibrate, other.recalibrate),
+            abort=self.abort or other.abort,
+            deadline_step=min(deadlines) if deadlines else None,
+            reasons=self.reasons + other.reasons)
+
+
+def change_for(event: ClusterEvent) -> MembershipChange:
+    """The membership delta one event implies (pure; policy lives in
+    :meth:`ClusterController._accept`)."""
+    reason = (type(event).__name__,)
+    if isinstance(event, StragglerSustained):
+        return MembershipChange(evict=(event.host,), reasons=reason)
+    if isinstance(event, DriftSustained):
+        return MembershipChange(recalibrate=event.skew, reasons=reason)
+    if isinstance(event, PreemptionWarning):
+        return MembershipChange(evict=(event.host,),
+                                deadline_step=event.deadline_step,
+                                reasons=reason)
+    if isinstance(event, HostLost):
+        return MembershipChange(evict=(event.host,), abort=True,
+                                reasons=reason)
+    if isinstance(event, HostJoin):
+        return MembershipChange(admit=(event.host,), reasons=reason)
+    raise TypeError(f"not a ClusterEvent: {event!r}")
+
+
+# ---------------------------------------------------------------------------
+# state machine
+# ---------------------------------------------------------------------------
+
+RUNNING = "RUNNING"
+DRAINING = "DRAINING"
+REBALANCING = "REBALANCING"
+RESUMING = "RESUMING"
+DONE = "DONE"
+PREEMPTED = "PREEMPTED"
+FAILED = "FAILED"
+
+TERMINAL = frozenset({DONE, PREEMPTED, FAILED})
+
+_TRANSITIONS = {
+    RUNNING: frozenset({DRAINING, DONE, PREEMPTED, FAILED}),
+    DRAINING: frozenset({REBALANCING, DONE, PREEMPTED, FAILED}),
+    REBALANCING: frozenset({RESUMING, FAILED}),
+    RESUMING: frozenset({RUNNING, FAILED}),
+    DONE: frozenset(),
+    PREEMPTED: frozenset(),
+    FAILED: frozenset(),
+}
+
+
+class IllegalTransition(RuntimeError):
+    """A state change (or an event delivery) the machine forbids."""
+
+
+@dataclasses.dataclass
+class MembershipStateMachine:
+    """Pure control state: where the run is, and what change is pending.
+
+    ``on_event`` folds a :class:`ClusterEvent` in according to the
+    current state — RUNNING starts a drain, DRAINING merges, REBALANCING
+    and RESUMING defer the event to the next segment (a change is being
+    applied; topology-relative decisions would race it), and terminal
+    states raise.  The controller owns *policy* (budgets, min-hosts);
+    the machine owns *sequencing*.
+    """
+    state: str = RUNNING
+    pending: MembershipChange = dataclasses.field(
+        default_factory=MembershipChange)
+    deferred: tuple = ()
+
+    def to(self, new_state: str) -> None:
+        if new_state not in _TRANSITIONS[self.state]:
+            raise IllegalTransition(
+                f"{self.state} → {new_state} is not a legal controller "
+                f"transition (allowed: "
+                f"{sorted(_TRANSITIONS[self.state]) or 'none — terminal'})")
+        self.state = new_state
+
+    def on_event(self, event: ClusterEvent) -> bool:
+        """Fold ``event`` in; True when the running segment must stop."""
+        if self.state in TERMINAL:
+            raise IllegalTransition(
+                f"{type(event).__name__} delivered in terminal state "
+                f"{self.state}")
+        if self.state in (REBALANCING, RESUMING):
+            self.deferred = self.deferred + (event,)
+            return False
+        self.pending = self.pending.merged(change_for(event))
+        if self.state == RUNNING:
+            self.to(DRAINING)
+        return True
+
+    def take(self) -> MembershipChange:
+        """The pending change, clearing it (DRAINING → REBALANCING)."""
+        change, self.pending = self.pending, MembershipChange()
+        return change
+
+    def take_deferred(self) -> tuple:
+        events, self.deferred = self.deferred, ()
+        return events
+
+
+# ---------------------------------------------------------------------------
+# event sources
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerSource:
+    """Per-host sustained-outlier detection → :class:`StragglerSustained`."""
+    aggregator: HostStragglerAggregator
+
+    def poll(self, step: int, times: dict, topology: HostTopology) -> list:
+        return [StragglerSustained(step=step, host=h, dt=times[h])
+                for h in self.aggregator.observe(times)]
+
+
+@dataclasses.dataclass
+class DriftSource:
+    """Predicted-vs-measured skew watch (DESIGN.md §10) →
+    :class:`DriftSustained`.
+
+    The first ``min_steps`` measured steps of each plan segment anchor
+    the cost model's time scale (absorbing the clock's units and the
+    constant modelling bias); afterwards each step feeds the profiler
+    per-group observations in anchored units and ``patience`` consecutive
+    steps with relative skew above ``1 + skew`` fire the event, once per
+    segment.  :meth:`rearm` resets for the next plan.
+    """
+    cfg: "CalibrationConfig"
+    profiler: Profiler
+
+    def __post_init__(self):
+        self.rearm({}, 0.0)
+
+    def rearm(self, features: dict, predicted: float) -> None:
+        self._feats = features
+        self._pred = predicted
+        self._n = 0
+        self._sum = 0.0
+        self._anchor = None
+        self._hot = 0
+        self._fired = False
+
+    def poll(self, step: int, times: dict, topology: HostTopology) -> list:
+        if self._fired or self._pred <= 0.0:
+            return []
+        measured = max(times.values())
+        self._n += 1
+        if self._n <= self.cfg.min_steps:
+            self._sum += measured
+            if self._n == self.cfg.min_steps:
+                self._anchor = (self._sum / self.cfg.min_steps) / self._pred
+            return []
+        for gname, (feats, _pred, members) in self._feats.items():
+            t_g = max((times[h] for h in members if h in times), default=0.0)
+            if t_g > 0.0:
+                self.profiler.record_step(gname, t_g / self._anchor, feats,
+                                          step=step)
+        skew = measured / (self._pred * self._anchor)
+        self._hot = self._hot + 1 if skew > 1.0 + self.cfg.skew else 0
+        if self._hot >= self.cfg.patience:
+            self._fired = True
+            return [DriftSustained(step=step, skew=skew)]
+        return []
+
+
+@dataclasses.dataclass
+class InjectorSource:
+    """Scenario playback → membership events (spot warn/lost, joins).
+
+    The injector fires each signal exactly once; this source grounds it
+    against the *live* topology — a host shed before its deadline never
+    emits :class:`HostLost`, and a join for an already-present host id is
+    dropped.
+    """
+    injector: FaultInjector
+    default_hw: Any = None          # hardware for joins that name none
+
+    def poll(self, step: int, times: dict, topology: HostTopology) -> list:
+        events = []
+        for kind, sc in self.injector.membership(step):
+            if kind == "preempt_warn" and sc.host in topology.host_ids:
+                events.append(PreemptionWarning(
+                    step=step, host=sc.host,
+                    deadline_step=sc.warn_step + sc.deadline_steps))
+            elif kind == "host_lost" and sc.host in topology.host_ids:
+                events.append(HostLost(step=step, host=sc.host))
+            elif kind == "join" and sc.host not in topology.host_ids:
+                events.append(HostJoin(step=step, host=SimHost(
+                    sc.host, sc.hw or self.default_hw, sc.n_devices)))
+        return events
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CalibrationConfig:
+    """Knobs for the drift-triggered rebalance loop (DESIGN.md §10).
+
+    The controller anchors the cost model's time scale to the first
+    ``min_steps`` measured steps of each plan (median measured / predicted
+    — absorbing the simulated clock's arbitrary units and constant
+    modelling bias), then watches the *relative* skew
+    ``measured / (predicted · anchor)``.  ``patience`` consecutive steps
+    above ``1 + skew`` trigger a recalibration: the profiler's windowed
+    observations re-fit each group's ``Hardware`` table and
+    ``ElasticContext.rebalance(hardware=...)`` re-plans with measured
+    rates — no host is evicted.  ``max_rebalances=0`` records
+    observations (``--profile``) without ever rebalancing.
+    """
+    skew: float = 0.25
+    patience: int = 5
+    min_steps: int = 8
+    window: int = 256               # observations per group fed to each fit
+    max_rebalances: int = 2
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    """Knobs for the self-healing loop (DESIGN.md §7, §12)."""
+    topology: HostTopology
+    threshold: float = 2.0          # straggler flag at mean + k·std
+    patience: int = 3               # sustained outlier steps before flagging
+    warmup: int = 5                 # per-monitor warmup (compile steps)
+    min_hosts: int = 1              # never evict below this
+    max_rebalances: int = 2         # then ride out the degradation
+    overlap: float = 0.5            # comm/compute overlap for the search
+    search_kw: dict = dataclasses.field(
+        # stay in the checkpoint's non-pipelined parameter layout: a live
+        # re-plan into a padded pipeline layout would need a migration
+        default_factory=lambda: {"max_pp": 1})
+    # predicted-vs-measured drift detection (None = off)
+    calibration: CalibrationConfig | None = None
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+
+class ClusterController:
+    """Elastic training under cluster-membership churn.
+
+    State machine (``.phase``)::
+
+        RUNNING ──accepted event──▶ DRAINING ──stop+ckpt──▶ REBALANCING
+           ▲                                                     │
+           └── RESUMING ◀── restore into the re-planned mesh ────┘
+        terminal: DONE (n_steps reached) | PREEMPTED (SIGTERM, final ckpt
+        committed — a relaunch auto-resumes) | FAILED (retry budget
+        exhausted and re-raise, after a final checkpoint)
+
+    One :class:`FaultTolerantLoop` segment runs per plan; per-host step
+    times (real, or synthesized by a
+    :class:`~repro.runtime.faults.FaultInjector` on the simulated
+    multi-host clock) feed the event sources each step, and any accepted
+    event drains the segment — normally with a final synchronous
+    checkpoint, or *without* one when the change says the state is
+    untrusted (:class:`HostLost`).  Every membership delta then flows
+    through :meth:`apply_membership_change`, shrink and grow alike.
+
+    Batches are fetched idempotently per step (a retried step replays the
+    *same* batch — the bounded-retry path cannot skip samples), and the
+    data stream's content is drawn at global-batch granularity, so the
+    sample stream is invariant across host-count changes in either
+    direction.
+    """
+
+    def __init__(self, model, cfg, optimizer, data: TokenPipeline,
+                 ckpt: CheckpointManager, *, elastic: ElasticConfig,
+                 batch: int, seq: int, save_every: int = 50,
+                 max_retries: int = 3, injector: FaultInjector | None = None,
+                 log_every: int = 10, verbose: bool = True):
+        self.model = model
+        self.cfg = cfg
+        self.optimizer = optimizer
+        self.data = data
+        self.ckpt = ckpt
+        self.elastic = elastic
+        self.topology = elastic.topology
+        # flattened for the elastic search (max_pp=1 default: segment
+        # boundaries are irrelevant to a pure DP/TP re-plan)
+        self.meta = model.graph(batch, seq).workload_meta()
+        self.save_every = save_every
+        self.max_retries = max_retries
+        self.injector = injector
+        self.log_every = log_every
+        self.verbose = verbose
+        self.machine = MembershipStateMachine()
+        self.events: list = []
+        self.losses: list = []
+        self.calibration = elastic.calibration
+        self.profiler = Profiler()
+        self.aggregator = HostStragglerAggregator(
+            n_hosts=len(self.topology.hosts),
+            threshold=elastic.threshold, patience=elastic.patience,
+            warmup=elastic.warmup)
+        self.aggregator.reset(self.topology.host_ids)
+        self.sources: list = [StragglerSource(self.aggregator)]
+        self.drift_source = None
+        if self.calibration is not None:
+            self.drift_source = DriftSource(self.calibration, self.profiler)
+            self.sources.append(self.drift_source)
+        if injector is not None:
+            self.sources.append(InjectorSource(
+                injector, default_hw=self.topology.hosts[0].hw))
+        self._rebalances = 0
+        self._recalibrations = 0
+        self._batch_step = -1
+        self._batch = None
+        self._data_state_before = None
+
+    @property
+    def phase(self) -> str:
+        return self.machine.state
+
+    # ------------------------------------------------------------- logging
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg)
+
+    def _event(self, kind: str, **kw) -> None:
+        self.events.append({"kind": kind, **kw})
+
+    # ------------------------------------------------------------ planning
+    def _plan_current(self):
+        """Search the current cluster and compile the plan + mesh."""
+        plan, cand = plan_for_cluster(
+            self.model, self.meta, self.topology.cluster_spec(),
+            devices=self.topology.devices(jax.devices()),
+            overlap=self.elastic.overlap, search_kw=self.elastic.search_kw)
+        return plan, float(cand.total)
+
+    def _predicted_total(self, plan) -> float:
+        """The cost model's step-time prediction for the current plan."""
+        if plan.placement is not None:
+            return float(plan.placement.cost.total)
+        g = self.topology.cluster_spec().groups[0]
+        return float(step_cost(self.meta, plan.strategy, g.hw,
+                               overlap=self.elastic.overlap).total)
+
+    def _group_features(self, plan) -> dict:
+        """Per device group: (calibration features, predicted s, hosts).
+
+        The features (``cost_model.step_cost_features`` of the group's
+        unit of work) are what the profiler attaches to each measured
+        group step time, so ``calibrate.fit`` can invert them back into
+        ``Hardware`` rates.
+        """
+        members = self.topology.group_hosts()
+        ov = self.elastic.overlap
+        out = {}
+        if plan.placement is not None:
+            for u in plan.placement.units:
+                if u.kind != "group":
+                    continue
+                out[u.group.name] = (
+                    step_cost_features(u.meta, u.strategy, u.group.hw,
+                                       overlap=ov),
+                    float(u.cost.total), members.get(u.group.name, []))
+        else:
+            g = self.topology.cluster_spec().groups[0]
+            out[g.name] = (
+                step_cost_features(self.meta, plan.strategy, g.hw,
+                                   overlap=ov),
+                float(step_cost(self.meta, plan.strategy, g.hw,
+                                overlap=ov).total),
+                members.get(g.name, list(self.topology.host_ids)))
+        return out
+
+    def _retune_model(self, spec) -> None:
+        """Re-autotune kernel tiles for ``spec`` and rebuild the model.
+
+        Plans re-run the tile autotuner inside ``compile_plan``, but the
+        *executing model* bakes block sizes into its config at startup —
+        after a membership change alters the hardware mix (evict/admit)
+        or the rates (recalibration), those baked tiles are stale.  Tiles
+        don't change parameter shapes, so the rebuilt model restores the
+        same checkpoint.
+        """
+        cfg = self.cfg
+        if "pallas" not in (cfg.attn_impl, cfg.xent_impl, cfg.ssd_impl):
+            return
+        if not getattr(cfg, "n_heads", 0):
+            return
+        from repro.kernels.autotune import DEFAULT_TILES, autotune_cluster
+        tiles_by_group = autotune_cluster(
+            spec, head_dim=cfg.hd,
+            group=cfg.n_heads // max(cfg.n_kv_heads, 1) or 1,
+            d_model=cfg.d_model, vocab=cfg.padded_vocab)
+        tiles = list(tiles_by_group.values())
+        lo = tiles[0] if tiles else DEFAULT_TILES
+        for t in tiles[1:]:                 # min over groups: fits everywhere
+            lo = dataclasses.replace(lo, **{
+                f.name: min(getattr(lo, f.name), getattr(t, f.name))
+                for f in dataclasses.fields(t)})
+        new_cfg = dataclasses.replace(
+            cfg, attn_block_q=lo.block_q, attn_block_k=lo.block_k,
+            xent_block_t=lo.xent_block_t, xent_block_v=lo.xent_block_v,
+            ssd_chunk=(lo.ssd_chunk if cfg.family in ("ssm", "hybrid")
+                       else cfg.ssd_chunk))
+        if new_cfg != cfg:
+            from repro.models.lm import build
+            self.cfg = new_cfg
+            self.model = build(new_cfg)
+            self._event("retune", tiles=str(lo))
+            self._log(f"[retune] kernel tiles re-sized for "
+                      f"{'+'.join(g.name for g in spec.groups)}: {lo}")
+
+    # ------------------------------------------------- event policy
+    def _accept(self, event: ClusterEvent) -> bool:
+        """Policy: does this event get to change the fleet?
+
+        The state machine sequences; this gates — budgets, floors, and
+        feasibility.  Rejected events are logged and dropped (the fleet
+        rides out the condition).
+        """
+        pending = self.machine.pending
+        if isinstance(event, StragglerSustained):
+            h = event.host
+            self._event("flag", step=event.step, host=h, dt=event.dt,
+                        mean=self.aggregator.monitors[h].mean
+                        if h in self.aggregator.monitors else None)
+            self._log(f"[straggler] host {h} flagged at step {event.step} "
+                      f"(dt={event.dt:.3f}s)")
+            survivors = (len(self.topology.hosts) - len(pending.evict) - 1)
+            if survivors < self.elastic.min_hosts:
+                self._log(f"[straggler] NOT evicting host {h}: "
+                          f"{survivors} survivors < min_hosts="
+                          f"{self.elastic.min_hosts}")
+                return False
+            if self._rebalances >= self.elastic.max_rebalances:
+                self._log("[straggler] rebalance budget exhausted; "
+                          "riding out the degradation")
+                return False
+            return True
+        if isinstance(event, DriftSustained):
+            if pending.evict:
+                return False        # an eviction already drains; its
+                                    # rebalance re-plans anyway
+            if self._recalibrations >= (self.calibration.max_rebalances
+                                        if self.calibration else 0):
+                return False
+            self._log(f"[drift] measured/predicted skew {event.skew:.2f} "
+                      f"sustained {self.calibration.patience} steps at "
+                      f"step {event.step}; stopping to recalibrate")
+            return True
+        if isinstance(event, PreemptionWarning):
+            # forced: the scheduler takes the host whether we drain or not
+            self._event("preempt_warn", step=event.step, host=event.host,
+                        deadline_step=event.deadline_step)
+            self._log(f"[preempt-warn] host {event.host} reclaimed by step "
+                      f"{event.deadline_step}; draining at step "
+                      f"{event.step}")
+            return True
+        if isinstance(event, HostLost):
+            self._event("host_lost", step=event.step, host=event.host)
+            self._log(f"[host-lost] host {event.host} vanished at step "
+                      f"{event.step} before the drain committed; falling "
+                      f"back to the last committed checkpoint")
+            return True
+        if isinstance(event, HostJoin):
+            sh = event.host
+            if self._rebalances >= self.elastic.max_rebalances:
+                self._log(f"[join] NOT admitting host {sh.host}: rebalance "
+                          f"budget exhausted")
+                return False
+            try:
+                grown = self.topology.with_host(sh)
+                for admitted in self.machine.pending.admit:
+                    grown = grown.with_host(admitted)
+                grown.devices(jax.devices())
+            except ValueError as e:
+                self._log(f"[join] NOT admitting host {sh.host}: {e}")
+                return False
+            self._log(f"[join] host {sh.host} offers {sh.n_devices}×"
+                      f"{sh.hw.name} at step {event.step}; draining to "
+                      f"grow")
+            return True
+        raise TypeError(f"not a ClusterEvent: {event!r}")
+
+    def _dispatch(self, event: ClusterEvent,
+                  loop: FaultTolerantLoop | None) -> None:
+        if not self._accept(event):
+            return
+        self.machine.on_event(event)
+        if loop is not None and self.machine.state == DRAINING:
+            if self.machine.pending.abort:
+                loop.request_abort()    # state untrusted: no final save
+            else:
+                loop.request_stop()     # drain with a final sync ckpt
+
+    # --------------------------------------------- unified membership path
+    def apply_membership_change(self, change: MembershipChange, *,
+                                at_step: int) -> tuple:
+        """THE one path every fleet reshape takes (shrink, grow, re-fit).
+
+        Evictions shrink the topology, admissions grow it, recalibration
+        re-fits the hardware tables from profiler observations — then one
+        shared tail: re-autotune kernel tiles for the new mix, re-plan
+        with the hetero-aware search, restore the committed checkpoint
+        into the new plan (for an aborted drain that checkpoint predates
+        ``at_step`` — the lost steps replay exactly-once), reshard the
+        data stream, reset the monitors.  Returns
+        ``(step, plan, state)``.
+        """
+        if self.machine.state != REBALANCING:
+            raise IllegalTransition(
+                f"apply_membership_change outside REBALANCING "
+                f"(state {self.machine.state})")
+        if change.is_noop:
+            raise ValueError("refusing to rebalance on a no-op "
+                             "MembershipChange")
+        hardware = None
+        if change.evict:
+            for h in change.evict:
+                self.aggregator.evict(h)
+            self.topology = self.topology.without(set(change.evict))
+            self._event("evict", step=at_step, hosts=list(change.evict),
+                        surviving_devices=self.topology.n_devices)
+            self._log(f"[evict] hosts {list(change.evict)} at step "
+                      f"{at_step}; rebalancing onto "
+                      f"{self.topology.n_devices} devices")
+        if change.admit:
+            for sh in change.admit:
+                self.topology = self.topology.with_host(sh)
+                self.aggregator.admit(sh.host)
+            self._event("join", step=at_step,
+                        hosts=[sh.host for sh in change.admit],
+                        total_devices=self.topology.n_devices)
+            self._log(f"[join] hosts {[sh.host for sh in change.admit]} "
+                      f"at step {at_step}; rebalancing onto "
+                      f"{self.topology.n_devices} devices")
+        tune_spec = self.topology.cluster_spec()
+        if change.recalibrate and not (change.evict or change.admit):
+            # drift-triggered recalibration: same fleet, re-fitted
+            # Hardware tables — continuous rebalancing (DESIGN.md §10)
+            tune_spec, hardware = self.profiler.fit_spec(
+                self.topology.cluster_spec(),
+                last_n=self.calibration.window)
+            self._event("drift", step=at_step, skew=change.recalibrate,
+                        hardware={
+                            n: {"eff_flops": h.peak_flops * h.mxu_eff,
+                                "n_obs": h.n_observations}
+                            for n, h in hardware.items()})
+            self._log(f"[drift] recalibrating at step {at_step} "
+                      f"(skew {change.recalibrate:.2f}); re-planning with "
+                      f"measured rates")
+        # stale-tiles fix: the executing model baked kernel tiles for the
+        # old mix/rates — re-autotune before re-meshing
+        self._retune_model(tune_spec)
+        ectx = ElasticContext(model=self.model, optimizer=self.optimizer)
+        t0 = time.monotonic()
+        step, plan, params, opt_state, extra = ectx.rebalance(
+            self.ckpt, self.topology.cluster_spec(), self.meta,
+            devices=self.topology.devices(jax.devices()),
+            overlap=self.elastic.overlap,
+            search_kw=self.elastic.search_kw,
+            hardware=hardware)
+        if "data" in extra:
+            self.data.load_state_dict(extra["data"])
+        self._reshard_data()
+        self._batch_step, self._batch = step - 1, None
+        state = {"params": params, "opt": opt_state}
+        if change.evict or change.admit:
+            kind = "rebalance"
+            self._rebalances += 1
+            self.profiler.clear()   # old groups' names/shares are stale
+        else:
+            kind = "recalibrate"
+            self._recalibrations += 1
+        self.aggregator.reset(self.topology.host_ids)
+        self._event(kind, step=step,
+                    strategy=plan.strategy.describe(),
+                    downtime_s=time.monotonic() - t0,
+                    placement=(plan.placement.describe()
+                               if plan.placement else None))
+        self._log(f"[{kind}] resumed at step {step} with "
+                  f"{plan.strategy.describe()}")
+        return step, plan, state
+
+    def _reshard_data(self) -> None:
+        """Re-slice the data stream onto the new host count (both
+        directions).  Content is drawn at global-batch granularity, so
+        the global stream is invariant; the single-process harness
+        consumes the global batch itself (1-of-1) and needs no
+        re-slicing."""
+        n_hosts = len(self.topology.hosts)
+        if self.data.n_hosts <= 1 or self.data.n_hosts == n_hosts:
+            return
+        if self.data.cfg.global_batch % n_hosts:
+            self._log(f"[reshard] keeping {self.data.n_hosts}-way data "
+                      f"sharding: global_batch "
+                      f"{self.data.cfg.global_batch} does not divide "
+                      f"over {n_hosts} hosts")
+            return
+        host_id = min(self.data.host_id, n_hosts - 1)
+        self.data = self.data.reshard(host_id=host_id, n_hosts=n_hosts)
+
+    def _build_step_fn(self, plan):
+        batch0 = {k: jnp.asarray(v) for k, v in self._peek_batch().items()}
+        with plan.mesh:
+            jfn = plan.jit_train_step(self.optimizer, batch0, donate=False)
+
+        def one_step(i, st):
+            if self.injector is not None:
+                self.injector.maybe_preempt(i)
+            batch = self._batch_for(i)
+            if self.injector is not None:
+                self.injector.maybe_fail(i)
+            with plan.mesh:
+                p, o, m = jfn(st["params"], st["opt"], batch,
+                              jnp.asarray(i))
+            self.losses.append(float(m["loss"]))
+            if i % self.log_every == 0:
+                self._log(f"  step {i:5d}  loss {self.losses[-1]:.4f}")
+            return {"params": p, "opt": o}
+
+        return one_step
+
+    # -------------------------------------------------- exactly-once data
+    def _peek_batch(self) -> dict:
+        """The next step's batch (cached, so the step replays it)."""
+        return self._batch_for(self._batch_step + 1)
+
+    def _batch_for(self, step: int) -> dict:
+        """Idempotent per-step batch: a retried step replays the same
+        samples instead of silently consuming the next draw."""
+        if step != self._batch_step:
+            self._data_state_before = self.data.state_dict()
+            raw = self.data.next_batch()
+            self._batch = {k: jnp.asarray(v) for k, v in raw.items()}
+            self._batch_step = step
+        return self._batch
+
+    def _data_state_at(self, step: int) -> dict:
+        """The pipeline position with exactly ``step`` batches consumed —
+        what a checkpoint committed at ``step`` must record.  A save at
+        the *failed* step (retry budget exhausted) lands one batch behind
+        the cursor, so the pre-fetch snapshot is returned instead."""
+        consumed = self._batch_step + 1
+        if step == self._batch_step and self._data_state_before is not None:
+            return dict(self._data_state_before)
+        if step != consumed:
+            raise RuntimeError(
+                f"data pipeline out of sync: checkpoint at step {step} but "
+                f"{consumed} batches consumed")
+        return self.data.state_dict()
+
+    # ------------------------------------------------------------ the loop
+    def run(self, n_steps: int, seed: int = 0) -> dict:
+        plan, predicted = self._plan_current()
+        self._log(f"[elastic] initial plan: "
+                  f"{plan.strategy.describe()} on "
+                  f"{self.topology.n_devices} devices "
+                  f"(predicted {predicted*1e3:.1f} ms/step)")
+        with plan.mesh:
+            params = plan.init_params(jax.random.key(seed))
+            opt_state = jax.jit(self.optimizer.init)(params)
+        step = 0
+        resume = self.ckpt.restore_latest({"params": params,
+                                           "opt": opt_state})
+        if resume is not None:
+            step, tree, extra = resume
+            params, opt_state = tree["params"], tree["opt"]
+            if "data" in extra:
+                self.data.load_state_dict(extra["data"])
+                self._batch_step, self._batch = step - 1, None
+            self._log(f"[resume] from step {step}")
+        state = {"params": params, "opt": opt_state}
+
+        while True:
+            # membership signals that arrived while the last change was
+            # applying re-enter the machine before the next segment runs
+            for ev in self.machine.take_deferred():
+                self._dispatch(ev, loop=None)
+            if self.machine.state == RUNNING:
+                if step >= n_steps:
+                    break
+                segment_start = step
+                if self.drift_source is not None:
+                    self.drift_source.rearm(self._group_features(plan),
+                                            self._predicted_total(plan))
+                loop = FaultTolerantLoop(self.ckpt,
+                                         save_every=self.save_every,
+                                         max_retries=self.max_retries)
+
+                def on_step(i, st, dt, _loop=loop, _start=segment_start):
+                    if i == _start:
+                        return      # jit-compile step would poison warmup
+                    hosts = self.topology.host_ids
+                    if self.injector is not None:
+                        times = self.injector.host_times(i, base=dt,
+                                                         hosts=hosts)
+                    else:
+                        # single-process: every host reports the global
+                        # step time; a real fleet reports per-host
+                        # measurements
+                        times = {h: dt for h in hosts}
+                    for source in self.sources:
+                        for ev in source.poll(i, times, self.topology):
+                            self._dispatch(ev, loop=_loop)
+
+                step_fn = self._build_step_fn(plan)
+                try:
+                    step, state = loop.run(
+                        state=state, step_fn=step_fn, n_steps=n_steps,
+                        start_step=step,
+                        extra_fn=lambda st, s: {"data":
+                                                self._data_state_at(s)},
+                        on_step=on_step)
+                except Exception:
+                    self.machine.to(FAILED)
+                    raise
+                if loop.preempted:
+                    self._event("preempted", step=step,
+                                pending_evictions=list(
+                                    self.machine.pending.evict))
+                    self._log(f"[preempt] SIGTERM at step {step}; final "
+                              f"checkpoint committed")
+                    self.machine.to(PREEMPTED)
+                    break
+            if self.machine.state != DRAINING:
+                break               # segment completed with nothing pending
+            if step >= n_steps and not self.machine.pending.abort:
+                # n_steps reached — an event raised on the very last step
+                # must not trigger a rebalance whose result is discarded
+                # (an abort is the exception: the tail was never
+                # committed, so the change must apply and replay it)
+                break
+            change = self.machine.take()
+            self.machine.to(REBALANCING)
+            step, plan, state = self.apply_membership_change(
+                change, at_step=step)
+            self.machine.to(RESUMING)
+            self.machine.to(RUNNING)
+        if self.machine.state not in TERMINAL:
+            self.machine.to(DONE)
+        return {"final_step": step, "state": state, "events": self.events,
+                "losses": self.losses, "phase": self.phase,
+                "topology": self.topology}

@@ -21,6 +21,7 @@ Two re-mesh flavours (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any
 
 import jax
@@ -176,15 +177,50 @@ class ElasticContext:
                                       else cand.placement), overlap=overlap)
 
 
-def shrink_devices(devices, exclude_hosts: set, *, host_of=None):
+def shrink_devices(devices, exclude_hosts: set, *, topology=None,
+                   host_of=None):
     """Filter a device list to exclude flagged hosts (straggler eviction).
 
-    ``host_of(device) -> host_id`` defaults to the real multi-process
-    mapping (``device.process_index``); a :class:`HostTopology` supplies
-    the simulated mapping when one process stands in for a fleet.
+    Host-keyed, like :meth:`HostTopology.without`: pass ``topology`` (a
+    :class:`HostTopology`) to use the simulated device→host mapping, or
+    nothing to use the real multi-process mapping
+    (``device.process_index``).
+
+    .. deprecated::
+        The ``host_of`` *callable* form is deprecated — it was the one
+        API in the eviction path keyed on a mapping function rather than
+        on hosts, and callers had to know to pass ``topology.host_of``
+        bound methods.  Pass ``topology=`` instead.
     """
-    host_of = host_of or (lambda d: d.process_index)
-    return [d for d in devices if host_of(d) not in exclude_hosts]
+    if host_of is not None:
+        warnings.warn(
+            "shrink_devices(host_of=) is deprecated: pass "
+            "topology=HostTopology(...) — the eviction APIs are keyed on "
+            "hosts (like HostTopology.without), not on mapping callables",
+            DeprecationWarning, stacklevel=2)
+    elif topology is not None:
+        host_of = topology.host_of
+    else:
+        host_of = (lambda d: d.process_index)
+    exclude = set(exclude_hosts)
+    return [d for d in devices if host_of(d) not in exclude]
+
+
+def grow_devices(devices, new_hosts, *, topology):
+    """Device list after admitting ``new_hosts`` (grow counterpart of
+    :func:`shrink_devices`).
+
+    ``new_hosts`` are :class:`SimHost` entries joining ``topology``
+    (host-keyed, like :meth:`HostTopology.with_host` — duplicate ids and
+    overlapping explicit offsets are loud errors); ``devices`` is the
+    flat backing list (``jax.devices()``).  Returns ``(device_list,
+    grown_topology)`` so the caller can re-mesh over exactly the devices
+    the grown topology owns.
+    """
+    grown = topology
+    for h in new_hosts:
+        grown = grown.with_host(h)
+    return grown.devices(devices), grown
 
 
 # ---------------------------------------------------------------------------
@@ -307,3 +343,47 @@ class HostTopology:
         if not keep:
             raise ValueError("eviction would remove every host")
         return HostTopology(hosts=keep)
+
+    def with_host(self, host: SimHost) -> "HostTopology":
+        """The grown topology after admitting ``host`` (grow counterpart
+        of :meth:`without`).
+
+        A ``host.offset < 0`` is placed **first-fit**: the lowest gap in
+        the flat device index space that holds ``n_devices`` — so a
+        re-admitted host reclaims the device range an eviction vacated
+        rather than extending the flat list forever.  An explicit offset
+        is honoured but must not overlap a live host's range.  Duplicate
+        host ids and non-positive device counts are loud errors.
+        """
+        if host.n_devices <= 0:
+            raise ValueError(
+                f"host {host.host} offers n_devices={host.n_devices}; "
+                "a joining host must bring at least one device")
+        if host.host in self.host_ids:
+            raise ValueError(
+                f"host {host.host} is already a member "
+                f"(hosts={self.host_ids}); evict it first or join under "
+                "a fresh id")
+        ranges = sorted((h.offset, h.offset + h.n_devices)
+                        for h in self.hosts)
+        if host.offset < 0:
+            # first-fit: gaps between live ranges, then the tail
+            cursor = 0
+            placed = None
+            for lo, hi in ranges:
+                if lo - cursor >= host.n_devices:
+                    placed = cursor
+                    break
+                cursor = max(cursor, hi)
+            host = dataclasses.replace(
+                host, offset=cursor if placed is None else placed)
+        else:
+            lo, hi = host.offset, host.offset + host.n_devices
+            for rlo, rhi in ranges:
+                if lo < rhi and rlo < hi:
+                    raise ValueError(
+                        f"host {host.host} requests device range "
+                        f"[{lo}, {hi}) overlapping a live host's "
+                        f"[{rlo}, {rhi})")
+        grown = sorted(self.hosts + (host,), key=lambda h: h.offset)
+        return HostTopology(hosts=tuple(grown))

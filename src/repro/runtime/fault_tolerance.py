@@ -34,6 +34,7 @@ class FaultTolerantLoop:
     def __post_init__(self):
         self._term_requested = False
         self._stop_requested = False
+        self._abort_requested = False
         self._prev_handlers = {}
 
     # --- signal handling ---
@@ -52,6 +53,19 @@ class FaultTolerantLoop:
         (``on_step`` calls this; the loop returns and the caller re-plans
         and calls :meth:`run` again with the new state)."""
         self._stop_requested = True
+
+    def request_abort(self) -> None:
+        """Ask the loop to exit after the current step WITHOUT a final
+        checkpoint — the deadline-missed membership path (a host died
+        mid-segment, so the in-flight state must not be committed; the
+        caller restores the last *committed* checkpoint and replays the
+        lost steps exactly-once)."""
+        self._abort_requested = True
+
+    @property
+    def aborted(self) -> bool:
+        """True once :meth:`request_abort` ended the last :meth:`run`."""
+        return self._abort_requested
 
     def install_signal_handlers(self) -> None:
         for sig in (signal.SIGTERM, signal.SIGINT):
@@ -77,6 +91,7 @@ class FaultTolerantLoop:
         """
         self.install_signal_handlers()
         self._stop_requested = False
+        self._abort_requested = False
         step = start_step
         try:
             while step < n_steps:
@@ -95,6 +110,8 @@ class FaultTolerantLoop:
                 if on_step is not None:
                     on_step(step, state, dt)
                 step += 1
+                if self._abort_requested:
+                    break           # untrusted state: commit NOTHING
                 if step % self.save_every == 0:
                     self._save(step, state, extra_fn)
                 if self._term_requested or self._stop_requested:

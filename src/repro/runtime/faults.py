@@ -20,16 +20,25 @@ be exercised end-to-end in a single process:
 - :class:`Preemption` — SIGTERM is delivered to the process before
   ``step`` (TPU maintenance events), exercising the final-synchronous-
   checkpoint path.
+- :class:`SpotPreemption` — the *membership* flavour (DESIGN.md §12): a
+  spot reclaim notice for one host at ``warn_step`` with the host
+  vanishing ``deadline_steps`` later, exercising the controller's
+  drain-within-deadline path (and the fall-back-to-last-checkpoint path
+  when the deadline is missed).
+- :class:`JoinHost` — a host *offers* capacity at ``step`` (scale-up /
+  spot re-admission), exercising the symmetric grow path.
 
 Per-host times are a pure function of ``(seed, step, host)`` — the same
 scenario always produces the same timeline, so tests and
-``benchmarks/fig_elastic.py`` are deterministic.
+``benchmarks/fig_elastic.py`` / ``benchmarks/fig_spot.py`` are
+deterministic.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import signal
+from typing import Any
 
 import numpy as np
 
@@ -85,6 +94,31 @@ class Preemption:
     step: int
 
 
+@dataclasses.dataclass(frozen=True)
+class SpotPreemption:
+    """Spot reclaim: the scheduler warns at ``warn_step`` that ``host``
+    disappears ``deadline_steps`` later.
+
+    ``deadline_steps=0`` models a missed/zero notice — the warning and
+    the loss land on the same step, so the controller cannot commit a
+    drain checkpoint and must fall back to the last committed one.
+    """
+    host: int
+    warn_step: int
+    deadline_steps: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinHost:
+    """A host offers ``n_devices`` devices of ``hw`` from ``step`` on
+    (scale-up, or a spot pool re-admitting reclaimed capacity).  A
+    ``hw`` of None takes the consuming fleet's default hardware."""
+    host: int
+    step: int
+    n_devices: int
+    hw: Any = None
+
+
 @dataclasses.dataclass
 class FaultInjector:
     """Deterministic scenario playback for the training controller.
@@ -111,6 +145,7 @@ class FaultInjector:
             id(s): s.times for s in self.scenarios
             if isinstance(s, CrashStep)}
         self._preempted: set = set()
+        self._membership_fired: set = set()
 
     # --- simulated multi-host clock ---
     def slow_factor(self, step: int, host: int) -> float:
@@ -149,6 +184,36 @@ class FaultInjector:
                 if self._crash_budget.get(id(s), 0) > 0:
                     self._crash_budget[id(s)] -= 1
                     raise RuntimeError(f"{s.message} (step {step})")
+
+    # --- cluster membership (DESIGN.md §12) ---
+    def membership(self, step: int) -> list:
+        """Membership signals due by ``step``: ``(kind, scenario)`` pairs.
+
+        Kinds are ``"preempt_warn"`` / ``"host_lost"`` (from
+        :class:`SpotPreemption`) and ``"join"`` (from :class:`JoinHost`).
+        Each signal fires **exactly once** — ``>=`` comparisons mean a
+        signal whose step fell inside a rebalance window still delivers
+        at the next polled step.  The caller grounds signals against its
+        live topology (a host shed before its deadline never *acts on*
+        ``host_lost``; the one-shot here still consumes it).
+        """
+        out = []
+        for s in self.scenarios:
+            if isinstance(s, SpotPreemption):
+                if step >= s.warn_step \
+                        and ("warn", id(s)) not in self._membership_fired:
+                    self._membership_fired.add(("warn", id(s)))
+                    out.append(("preempt_warn", s))
+                if step >= s.warn_step + s.deadline_steps \
+                        and ("lost", id(s)) not in self._membership_fired:
+                    self._membership_fired.add(("lost", id(s)))
+                    out.append(("host_lost", s))
+            elif isinstance(s, JoinHost):
+                if step >= s.step \
+                        and ("join", id(s)) not in self._membership_fired:
+                    self._membership_fired.add(("join", id(s)))
+                    out.append(("join", s))
+        return out
 
     # --- preemption ---
     def maybe_preempt(self, step: int) -> None:

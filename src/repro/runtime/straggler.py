@@ -118,6 +118,15 @@ class HostStragglerAggregator:
         self.evicted.add(host)
         self.monitors.pop(host, None)
 
+    def admit(self, host: int) -> None:
+        """(Re-)admit ``host``: clear any eviction record and start a
+        fresh monitor — a joining host (spot re-admission, scale-up) is
+        healthy until its own timings say otherwise.  This is the only
+        way an evicted host comes back; :meth:`reset` never resurrects
+        one."""
+        self.evicted.discard(host)
+        self.monitors[host] = self._new_monitor()
+
     def reset(self, hosts=None) -> None:
         """Fresh monitors after a re-plan (step times change shape).
 

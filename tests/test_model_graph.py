@@ -13,9 +13,10 @@ Four guarantees this suite freezes:
 3. **Segment-respecting partitions** — stage enumeration never splits
    inside an atomic segment, and the exact min-max DP only returns valid
    partitions (hypothesis-fuzzed over random segment structures).
-4. **Deprecation** — the two legacy derivation paths
-   (``lm_workload_meta``, ``meta_from_taskgraph``) warn loudly and
-   delegate to the graph builders.
+4. **Removal** — the two legacy derivation paths (``lm_workload_meta``,
+   ``meta_from_taskgraph``) are gone for good: tombstone tests pin the
+   names absent so a revert cannot silently resurrect them (the
+   ``make_gpipe_*`` removal pattern from tests/test_schedule.py).
 """
 import dataclasses
 import math
@@ -24,11 +25,11 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs import ARCH_NAMES, get_config
-from repro.core.auto import graph_from_taskgraph, meta_from_taskgraph
+from repro.core.auto import graph_from_taskgraph
 from repro.core.cost_model import (ClusterSpec, DeviceGroup, ModelGraph,
                                    SegmentMeta, StrategySpec, T4_16G,
                                    V100_PAPER, WorkloadMeta,
-                                   as_workload_meta, lm_workload_meta)
+                                   as_workload_meta)
 from repro.core.hetero import (partition_min_max, plan_placement,
                                scale_meta_stage)
 from repro.core.ir import Subgraph, TaskGraph, TensorMeta
@@ -411,15 +412,20 @@ def test_as_workload_meta_passthrough_and_flatten():
 
 
 # ---------------------------------------------------------------------------
-# 4. deprecation of the legacy derivation paths
+# 4. tombstones: the legacy derivation paths are gone for good
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("arch", ("tinyllama-1.1b", "qwen2-vl-2b"))
-def test_lm_workload_meta_warns_and_delegates(arch):
-    cfg = get_config(arch, smoke=True)
-    with pytest.warns(DeprecationWarning, match="lm_workload_meta"):
-        legacy_path = lm_workload_meta(cfg, batch=4, seq=64)
-    assert legacy_path == model_graph(cfg, 4, 64).workload_meta()
+def test_legacy_meta_shims_removed():
+    """The PR 9 DeprecationWarning shims were deleted — the graph builders
+    are the only derivation path.  A revert that resurrects the old names
+    must fail here (same pattern as the make_gpipe_* tombstones in
+    tests/test_schedule.py)."""
+    import repro.core as core
+    from repro.core import auto, cost_model
+    assert not hasattr(cost_model, "lm_workload_meta")
+    assert not hasattr(auto, "meta_from_taskgraph")
+    assert not hasattr(core, "lm_workload_meta")
+    assert not hasattr(core, "meta_from_taskgraph")
 
 
 def _toy_taskgraph() -> TaskGraph:
@@ -435,12 +441,10 @@ def _toy_taskgraph() -> TaskGraph:
     return tg
 
 
-def test_meta_from_taskgraph_warns_and_matches_graph_flatten():
-    tg = _toy_taskgraph()
-    with pytest.warns(DeprecationWarning, match="graph_from_taskgraph"):
-        legacy_path = meta_from_taskgraph(tg, 8)
-    g = graph_from_taskgraph(tg, 8)
-    assert legacy_path == g.workload_meta()
-    # repeated substructure clusters → segments
+def test_graph_from_taskgraph_clusters_repeats():
+    # repeated substructure clusters → segments (the structural assertion
+    # the retired meta_from_taskgraph test carried)
+    g = graph_from_taskgraph(_toy_taskgraph(), 8)
     assert len(g.segments) == 2
     assert g.segments[0].n_layers == 5
+    assert g.workload_meta().batch == 8

@@ -242,12 +242,17 @@ class _FakeDev:
         self.process_index = proc
 
 
-def test_shrink_devices_default_and_host_of():
+def test_shrink_devices_default_and_topology():
     devs = [_FakeDev(i, proc=i // 2) for i in range(6)]
     assert [d.id for d in shrink_devices(devs, {1})] == [0, 1, 4, 5]
     topo = HostTopology.uniform(3, 2, TPU_V5E)
-    out = shrink_devices(devs, {0, 2}, host_of=topo.host_of)
+    out = shrink_devices(devs, {0, 2}, topology=topo)
     assert [d.id for d in out] == [2, 3]
+    # the deprecated callable form warns but still filters identically
+    # (the mixed-fleet agreement regression lives in test_controller.py)
+    with pytest.warns(DeprecationWarning, match="host_of"):
+        legacy = shrink_devices(devs, {0, 2}, host_of=topo.host_of)
+    assert [d.id for d in legacy] == [2, 3]
 
 
 def test_host_topology_mapping_and_spec_merging():
